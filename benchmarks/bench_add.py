@@ -1,0 +1,54 @@
+"""Fig. 9 reproduction: matrix add/sub gains nothing from acceleration.
+
+The paper counts elementary CPU operations (hardware counter) and finds
+add/sub transfer-bound. We reproduce the claim with the arithmetic-
+intensity classifier plus measured wall-clock: GEMM vs add on the same
+4096^2 operands — the add runs at memory bandwidth, the GEMM at
+compute rate, on every chip model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jax
+from repro.core import hw, intensity
+from repro.kernels import ops
+
+
+def run() -> None:
+    n = 4096
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+
+    t_add = time_jax(jax.jit(lambda x, y: ops.add(x, y)), a, b,
+                     warmup=1, iters=5)
+    emit(f"add_host_{n}", t_add,
+         f"GBps={3*4*n*n/t_add/1e9:.1f}")
+
+    # classifier: claim C3 on both chips
+    for chip_name, chip in (("c2050", hw.TESLA_C2050), ("v5e", hw.TPU_V5E)):
+        cl_add = intensity.classify(intensity.add_profile(n, n, 4),
+                                    chip=chip, itemsize=4)
+        cl_mm = intensity.classify(intensity.matmul_profile(n, n, n, 4),
+                                   chip=chip, itemsize=4)
+        emit(f"add_model_{chip_name}_{n}", cl_add["t_memory"],
+             f"bound={cl_add['bound']};AI={cl_add['arithmetic_intensity']:.3f};"
+             f"attainable_gflops={cl_add['attainable_flops']/1e9:.1f}")
+        emit(f"matmul_model_{chip_name}_{n}_for_contrast",
+             max(cl_mm["t_compute"], cl_mm["t_memory"]),
+             f"bound={cl_mm['bound']};AI={cl_mm['arithmetic_intensity']:.0f}")
+
+    # interpret-mode kernel twin (correctness; not wall-clock)
+    s = 1024
+    x = jnp.asarray(rng.normal(size=(s, s)), jnp.float32)
+    t = time_jax(lambda p, q: ops.add(p, q, backend="pallas_interpret"),
+                 x, x, warmup=1, iters=2)
+    emit(f"add_pallas_interpret_{s}", t, "interpreter")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Framework-level step benchmark: reduced-config train and decode
+steps per architecture family on this host (CPU). Wall-clock here is a
+smoke-level throughput number; the TPU-target numbers live in the
+roofline table (bench_roofline_table)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from benchmarks.common import emit, time_jax
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.optim.adamw import AdamW
+from repro.training import train_loop as TL
+
+ARCHS = ("qwen3-0.6b", "mixtral-8x22b", "mamba2-2.7b", "zamba2-1.2b",
+         "whisper-tiny")
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for name in ARCHS:
+        cfg = C.get_config(name, reduced=True)
+        opt = AdamW(lr=1e-3)
+        state = TL.init_state(cfg, opt, jax.random.PRNGKey(0))
+        B, S = 4, 64
+        data = SyntheticLM(vocab=cfg.vocab, seq_len=S, batch=B)
+        batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros((B, S, cfg.d_model),
+                                              jnp.dtype(cfg.dtype))
+            pos = np.broadcast_to(np.arange(S)[None, :, None], (B, S, 3))
+            batch["positions"] = jnp.asarray(pos, jnp.int32)
+        if cfg.family == "encdec":
+            batch["enc_frames"] = jnp.asarray(
+                rng.normal(size=(B, cfg.enc_ctx, cfg.d_model)), jnp.float32)
+
+        step = jax.jit(TL.make_train_step(cfg, opt))
+        t = time_jax(step, state, batch, warmup=1, iters=3)
+        emit(f"train_step_{name}_reduced_b{B}s{S}", t,
+             f"tokens_per_s={B*S/t:.0f}")
+
+        serve = jax.jit(TL.make_serve_step(cfg))
+        cache = M.init_cache(cfg, B, 128)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        td = time_jax(serve, state.params, tok, jnp.int32(64), cache,
+                      warmup=1, iters=3)
+        emit(f"decode_step_{name}_reduced_b{B}", td,
+             f"tok_per_s={B/td:.0f}")
+
+
+if __name__ == "__main__":
+    run()

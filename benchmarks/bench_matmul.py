@@ -1,0 +1,78 @@
+"""Table 2 / Fig. 7 reproduction: GEMM across backends x dtypes.
+
+Measured on this container: XLA-CPU wall-clock (the 'sequential CPU'
+stand-in) and interpret-mode Pallas (correctness twin of the TPU
+kernel). Modeled: per-chip roofline times for the paper's accelerators
+(C1060, C2050 naive/shared) and the v5e target, reported next to the
+paper's own Table-2 seconds so the reproduction is checkable
+column-by-column.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jax
+from repro.core import blocking, gemm, hw, precision
+from repro.configs.paper_gemm import CONFIG as PAPER
+
+
+def modeled_time(chip, n, itemsize, shared: bool) -> float:
+    cfg = blocking.choose_block_config(n, n, n, itemsize, chip=chip) \
+        if shared else None
+    return blocking.gemm_time_model(n, n, n, itemsize, cfg, chip=chip)["t_total"]
+
+
+def run() -> None:
+    n = PAPER.n                                    # 4096, the paper's size
+    rng = np.random.default_rng(0)
+
+    # --- measured XLA-CPU wall-clock (this container's 'CPU column')
+    for dtype, iters in (("float32", 3), ("complex64", 2)):
+        a = jnp.asarray(rng.normal(size=(n, n)), dtype) \
+            if dtype != "complex64" else jnp.asarray(
+                rng.normal(size=(n, n)) + 1j * rng.normal(size=(n, n)),
+                dtype)
+        f = jax.jit(lambda x, y: gemm.matmul(x, y, backend="xla"))
+        t = time_jax(f, a, a, warmup=1, iters=iters)
+        flops = precision.gemm_flops(n, n, n, dtype)
+        emit(f"matmul_xla_cpu_{dtype}_{n}", t,
+             f"gflops={flops/t/1e9:.1f}")
+
+    # --- measured interpret-mode Pallas (kernel correctness twin)
+    ni = 512
+    a = jnp.asarray(rng.normal(size=(ni, ni)), jnp.float32)
+    for backend in ("pallas_interpret", "naive_interpret"):
+        f = lambda x, y: gemm.matmul(x, y, backend=backend)
+        t = time_jax(f, a, a, warmup=1, iters=2)
+        emit(f"matmul_{backend}_{ni}", t,
+             "interpreter-not-wallclock-meaningful")
+
+    # --- modeled Table 2 (per-chip roofline), float column
+    paper = PAPER.reference_times
+    rows = [
+        ("tesla-c1060", hw.TESLA_C1060, False, paper[("tesla-c1060", "float32")]),
+        ("tesla-c2050-naive", hw.TESLA_C2050, False, paper[("tesla-c2050", "float32")]),
+        ("tesla-c2050-shared", hw.TESLA_C2050, True, paper[("tesla-c2050-shared", "float32")]),
+    ]
+    for name, chip, shared, t_paper in rows:
+        t_model = modeled_time(chip, n, 4, shared)
+        emit(f"matmul_model_{name}_f32_{n}", t_model,
+             f"paper_measured_s={t_paper};model/paper={t_model/t_paper:.3f}")
+
+    # --- modeled v5e target, the three paper dtypes
+    for dtype, itemsize in (("bf16", 2), ("float32", 4), ("float64", 8)):
+        t_model = modeled_time(hw.TPU_V5E, n, itemsize, True)
+        flops = 2.0 * n ** 3
+        emit(f"matmul_model_v5e_{dtype}_{n}", t_model,
+             f"gflops={flops/t_model/1e9:.0f}")
+    # complex64 via gauss3: 3 real f32 GEMMs (beyond-paper: 3 not 4)
+    t3 = 3 * modeled_time(hw.TPU_V5E, n, 4, True)
+    emit(f"matmul_model_v5e_complex64_gauss3_{n}", t3,
+         f"vs_naive4={4*modeled_time(hw.TPU_V5E, n, 4, True)/t3:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Deliverable (g) surface: print the roofline table from the dry-run
+artifacts (experiments/dryrun/*.json). The us_per_call column carries
+the modeled dominant-term time per step on the target (v5e)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(pattern: str = "experiments/dryrun/*__singlepod.json") -> None:
+    files = sorted(glob.glob(pattern))
+    if not files:
+        print("# no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    for path in files:
+        with open(path) as f:
+            r = json.load(f)
+        name = os.path.basename(path).replace(".json", "")
+        if r.get("skipped"):
+            emit(f"roofline_{name}", 0.0, f"SKIPPED:{r['reason'][:60]}")
+            continue
+        dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        emit(f"roofline_{name}", dom,
+             f"bound={r['bound']};tc={r['t_compute']:.4f}"
+             f";tm={r['t_memory']:.4f};tcoll={r['t_collective']:.4f}"
+             f";useful={r['useful_ratio']:.3f};mfu_roofline={r['mfu_roofline']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

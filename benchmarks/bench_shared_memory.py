@@ -1,0 +1,61 @@
+"""Fig. 8 reproduction: shared-memory (tiled) vs hierarchy-blind GEMM.
+
+The paper measures 2.49s -> 0.83s (3.0x) on Fermi at 4096^2 float. We
+report: (a) the HBM-traffic model for both kernels (the mechanism), (b)
+modeled times on C2050 — checkable against the paper's 3.0x — and v5e,
+(c) measured XLA-CPU wall-clock for a cache-blocked vs a forced-naive
+(row-at-a-time dot) formulation, the same effect on this host's cache
+hierarchy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jax
+from repro.core import blocking, hw
+
+
+def run() -> None:
+    n = 4096
+    for chip_name, chip in (("c2050", hw.TESLA_C2050),
+                            ("v5e", hw.TPU_V5E)):
+        cfg = blocking.choose_block_config(n, n, n, 4, chip=chip)
+        tiled = blocking.gemm_time_model(n, n, n, 4, cfg, chip=chip)
+        naive = blocking.gemm_time_model(n, n, n, 4, None, chip=chip)
+        emit(f"shared_memory_model_{chip_name}_tiled_{n}", tiled["t_total"],
+             f"bound={tiled['bound']};traffic_GB={tiled['bytes']/1e9:.2f};"
+             f"block={cfg.bm}x{cfg.bn}x{cfg.bk}")
+        emit(f"shared_memory_model_{chip_name}_naive_{n}", naive["t_total"],
+             f"bound={naive['bound']};traffic_GB={naive['bytes']/1e9:.2f};"
+             f"speedup_tiled={naive['t_total']/tiled['t_total']:.1f}x"
+             + (";paper_measured=3.0x" if chip_name == "c2050" else ""))
+
+    # measured on this host: blocked (XLA dot) vs deliberately
+    # hierarchy-blind (per-row dots; no k-blocking, no reuse)
+    m = 1024
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, m)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(m, m)), jnp.float32)
+
+    blocked = jax.jit(lambda x, y: x @ y)
+    t_blocked = time_jax(blocked, a, b, warmup=1, iters=3)
+
+    @jax.jit
+    def rowwise(x, y):
+        def body(_, row):
+            return _, row @ y            # streams all of y per row
+        _, out = jax.lax.scan(body, None, x)
+        return out
+
+    t_naive = time_jax(rowwise, a, b, warmup=1, iters=3)
+    emit(f"shared_memory_host_blocked_{m}", t_blocked,
+         f"gflops={2*m**3/t_blocked/1e9:.1f}")
+    emit(f"shared_memory_host_rowwise_{m}", t_naive,
+         f"speedup_blocked={t_naive/t_blocked:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Output contract: ``name,us_per_call,derived`` CSV lines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_add, bench_arch_step, bench_distributed_gemm,
+                        bench_matmul, bench_roofline_table,
+                        bench_shared_memory)
+
+SUITES = {
+    "matmul": bench_matmul.run,               # Table 2 / Fig 7
+    "shared_memory": bench_shared_memory.run,  # Fig 8
+    "add": bench_add.run,                      # Fig 9
+    "distributed_gemm": bench_distributed_gemm.run,  # S2050 section
+    "arch_step": bench_arch_step.run,          # framework-level
+    "roofline_table": bench_roofline_table.run,  # deliverable (g)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print("# FAILED suites:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

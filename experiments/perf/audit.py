@@ -1,0 +1,47 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Charge audit for one hillclimb iteration: top HBM charges outside
+the kernel-substituted tags + collective breakdown.
+
+    python experiments/perf/audit.py ARCH SHAPE [key=val ...]
+"""
+
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import lower_cell
+from repro.roofline import hlo as H
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    overrides = {}
+    for kv in sys.argv[3:]:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        overrides[k] = v
+    compiled, rj = lower_cell(arch, shape, overrides=overrides or None,
+                              verbose=False)
+    costs = H.analyze(compiled.as_text(), 256)
+    print(f"total hbm/dev: {costs.hbm_bytes/2**40:.2f} TiB   "
+          f"tagged: { {k: f'{v/2**40:.2f}TiB' for k, v in costs.tagged_bytes.items()} }")
+    print(f"ici/dev: {costs.ici_bytes/2**30:.1f} GiB")
+    for op, d in sorted(costs.collective_summary().items()):
+        print(f"  {op:22s} n={d['count']:6d} ici={d['ici_bytes']/2**30:9.1f}GiB")
+    big = sorted(costs.collectives, key=lambda c: -c.ici_bytes * c.count)[:8]
+    for c in big:
+        print(f"    {c.op:20s} n={c.count:5d} res={c.bytes_result/2**20:8.1f}MiB "
+              f"grp={c.group_size} {c.where[:44]}")
+    print("top charges:")
+    for b, desc in costs.top_charges(18):
+        print(f"  {b/2**30:9.1f}GiB {desc[:110]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+For one (arch x shape) cell, lower+compile a sequence of named
+iterations (config overrides), re-derive the roofline terms per
+iteration, optionally apply the Pallas-kernel substitution model, and
+dump JSON per iteration.
+
+Kernel-substitution model (applies to tm only, flops unchanged —
+conservative): instructions inside jax.named_scope("flashsite") /
+("ssdsite") are the attention / SSD chunk interiors. On the TPU target
+these regions run as the Pallas kernels in kernels/ (flash_attention is
+implemented + interpret-validated; the SSD analogue follows the Mamba-2
+kernel structure), whose intermediates stay in VMEM. Substituted HBM
+traffic = kernel I/O only:
+
+  flash: fwd = q+k+v+o bytes;    train total = 4.5x fwd
+         (fwd + remat re-fwd + bwd reading qkv,o,do writing dq,dk,dv)
+  ssd:   fwd = 3 x (B*L*d_inner) * itemsize;  train total = 4.5x fwd
+
+    PYTHONPATH=src python experiments/perf/hillclimb.py CELL
+"""
+
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from repro.configs import get_config
+from repro.configs.base import get_shape
+from repro.core import hw
+from repro.launch.dryrun import lower_cell
+from repro.roofline import hlo as H
+
+CHIP = hw.TPU_V5E
+
+
+def flash_io_bytes(cfg, cell, n_devices, *, attn_shards: int) -> float:
+    """Per-device flash-kernel I/O bytes for the whole step.
+    attn_shards = how many ways the attention tensors are sharded
+    (dp x head-shards; 16*8=128 for qwen1.5's 8x2 factoring)."""
+    b, t = cell.global_batch, cell.seq_len
+    dh = cfg.resolved_head_dim
+    itm = 2  # bf16 kernel I/O
+    if cell.kind == "decode":
+        tq, layers_mult = 1, 1.0
+    elif cell.kind == "prefill":
+        tq, layers_mult = t, 1.0
+    else:
+        tq, layers_mult = t, 4.5
+    qo = 2 * b * tq * cfg.n_heads * dh * itm
+    kv = 2 * b * t * cfg.n_kv_heads * dh * itm
+    per_layer = (qo + kv) * layers_mult
+    n_attn_layers = cfg.n_layers if cfg.family != "hybrid" \
+        else cfg.n_layers // cfg.attn_every
+    if cfg.family == "encdec":
+        n_attn_layers = cfg.n_layers * 2 + cfg.n_enc_layers
+    return per_layer * n_attn_layers / max(attn_shards, 1)
+
+
+def ssd_io_bytes(cfg, cell, n_devices) -> float:
+    b, t = cell.global_batch, cell.seq_len
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    itm = 2
+    mult = 4.5 if cell.kind == "train" else 1.0
+    if cell.kind == "decode":
+        t = 1
+    per_layer = 3 * b * t * d_inner * itm * mult
+    return per_layer * cfg.n_layers / n_devices
+
+
+def run_iteration(arch, shape, label, overrides=None, subs=(),
+                  attn_shards=16, multi_pod=False):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = get_shape(shape)
+    compiled, rj = lower_cell(arch, shape, overrides=overrides,
+                              multi_pod=multi_pod, verbose=False)
+    n_dev = 512 if multi_pod else 256
+    costs = H.analyze(compiled.as_text(), n_dev)
+
+    hbm = costs.hbm_bytes
+    note = []
+    for tag in subs:
+        removed = costs.tagged_bytes.get(tag, 0.0)
+        if tag == "flashsite":
+            added = flash_io_bytes(cfg, cell, n_dev,
+                                   attn_shards=attn_shards)
+        else:
+            added = ssd_io_bytes(cfg, cell, n_dev)
+        hbm = hbm - removed + added
+        note.append(f"{tag}: -{removed/2**30:.1f}GiB +{added/2**30:.2f}GiB")
+
+    t_c = costs.flops / CHIP.peak_flops_bf16
+    t_m = hbm / CHIP.hbm_bw
+    t_coll = costs.ici_bytes / CHIP.ici_link_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    mf = rj["model_flops_total"]
+    mfu = (mf / n_dev / CHIP.peak_flops_bf16) / max(max(terms.values()), 1e-30)
+
+    out = {
+        "cell": f"{arch}x{shape}", "label": label,
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_coll,
+        "bound": bound, "mfu_roofline": mfu,
+        "hbm_per_dev": hbm, "ici_per_dev": costs.ici_bytes,
+        "flops_per_dev": costs.flops,
+        "collectives": costs.collective_summary(),
+        "substitutions": note,
+        "compile_s": rj["compile_seconds"],
+    }
+    fn = f"experiments/perf/{arch}__{shape}__{label}.json"
+    with open(fn, "w") as f:
+        json.dump(out, f, indent=2, default=str)
+    print(f"[{label:28s}] tc={t_c:8.3f}s tm={t_m:8.3f}s tcoll={t_coll:8.3f}s"
+          f" bound={bound:10s} mfu*={mfu:.4f} {'; '.join(note)}")
+    return out
+
+
+def main():
+    cell = sys.argv[1] if len(sys.argv) > 1 else "qwen15"
+    if cell == "qwen15":
+        a, s = "qwen1.5-32b", "train_4k"
+        # final iteration ladder (earlier passes recorded in §Perf)
+        run_iteration(a, s, "it0_replicate_baseline",
+                      {"constrain_mode": "replicate"})
+        run_iteration(a, s, "it1_free_head_dims")
+        run_iteration(a, s, "it2_seqshard_vs_free",
+                      {"shard_attn_seq": True})
+        run_iteration(a, s, "it3_bf16_attn_io", {"attn_f32_io": False})
+        run_iteration(a, s, "it4_flash_kernel", {"attn_f32_io": False},
+                      subs=("flashsite",), attn_shards=16 * 8)
+    elif cell == "mixtral":
+        a, s = "mixtral-8x22b", "train_4k"
+        run_iteration(a, s, "it0_baseline")   # with constraint-fix defaults
+        run_iteration(a, s, "it1_bf16_attn_io", {"attn_f32_io": False})
+        run_iteration(a, s, "it2_flash_kernel", {"attn_f32_io": False},
+                      subs=("flashsite",), attn_shards=256)
+        from repro.configs.base import MoEConfig
+        cfg0 = get_config(a)
+        moe_g128 = dataclasses.replace(cfg0.moe, group_size=128)
+        run_iteration(a, s, "it3_moe_group128",
+                      {"attn_f32_io": False, "moe": moe_g128},
+                      subs=("flashsite",), attn_shards=256)
+        run_iteration(a, s, "it4_remat_dots",
+                      {"attn_f32_io": False, "remat": "dots"},
+                      subs=("flashsite",), attn_shards=256)
+        # it5: bf16 combine einsum (code change) + best-so-far
+        run_iteration(a, s, "it5_bf16_combine_remat",
+                      {"remat": "dots"},
+                      subs=("flashsite",), attn_shards=256)
+    elif cell == "mamba2":
+        a, s = "mamba2-2.7b", "prefill_32k"
+        run_iteration(a, s, "it0_baseline")   # with constraint-fix defaults
+        from repro.configs.base import SSMConfig
+        cfg0 = get_config(a)
+        ssm128 = dataclasses.replace(cfg0.ssm, chunk=128)
+        run_iteration(a, s, "it1_chunk128", {"ssm": ssm128})
+        run_iteration(a, s, "it2_ssd_kernel", subs=("ssdsite",))
+        ssm512 = dataclasses.replace(cfg0.ssm, chunk=512)
+        run_iteration(a, s, "it3_chunk512_kernel", {"ssm": ssm512},
+                      subs=("ssdsite",))
+        # it4: split B/C/dt projection (now the code default) — removes
+        # the per-layer broadcast of stranded state channels
+        run_iteration(a, s, "it4_split_bc_proj")
+        run_iteration(a, s, "it5_split_plus_kernel", subs=("ssdsite",))
+    else:
+        raise SystemExit(f"unknown cell {cell}")
+
+
+if __name__ == "__main__":
+    main()

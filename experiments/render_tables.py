@@ -1,0 +1,104 @@
+"""Render EXPERIMENTS.md tables from dry-run / perf artifacts.
+
+    python experiments/render_tables.py dryrun    # §Dry-run + §Roofline
+    python experiments/render_tables.py perf      # §Perf iteration log
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_b(x):
+    if x >= 2**40:
+        return f"{x/2**40:.2f}T"
+    if x >= 2**30:
+        return f"{x/2**30:.1f}G"
+    return f"{x/2**20:.0f}M"
+
+
+def dryrun_tables():
+    rows = {}
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        name = os.path.basename(path)[:-5]
+        arch, shape, mesh = name.split("__")
+        with open(path) as f:
+            rows[(arch, shape, mesh)] = json.load(f)
+
+    print("### Compile status (every arch x shape x mesh)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | bytes/dev (args+temp) |")
+    print("|---|---|---|---|---|")
+    archs = sorted({k[0] for k in rows})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for a in archs:
+        for s in shapes:
+            r1 = rows.get((a, s, "singlepod"))
+            r2 = rows.get((a, s, "multipod"))
+            if r1 is None:
+                continue
+            if r1.get("skipped"):
+                print(f"| {a} | {s} | SKIP | SKIP | — |")
+                continue
+            ma = r1["memory_analysis"]
+            tot = (ma.get("argument_size_in_bytes") or 0) + \
+                  (ma.get("temp_size_in_bytes") or 0)
+            ok2 = "OK" if (r2 and not r2.get("skipped")) else "?"
+            print(f"| {a} | {s} | OK ({r1['compile_seconds']:.0f}s) "
+                  f"| {ok2} | {fmt_b(tot)} |")
+
+    print("\n### Roofline terms (single-pod 16x16, per device, seconds)\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | bound | "
+          "MODEL/HLO flops | mfu* |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r = rows.get((a, s, "singlepod"))
+            if r is None or r.get("skipped"):
+                continue
+            print(f"| {a} | {s} | {r['t_compute']:.3f} | {r['t_memory']:.3f} "
+                  f"| {r['t_collective']:.3f} | {r['bound']} "
+                  f"| {r['useful_ratio']:.3f} | {r['mfu_roofline']:.4f} |")
+
+    print("\n### Collective mix (single-pod; ICI GiB per device per step)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter "
+          "| all-to-all | permute |")
+    print("|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r = rows.get((a, s, "singlepod"))
+            if r is None or r.get("skipped"):
+                continue
+            c = r["collectives"]
+
+            def g(op):
+                return (c.get(op, {}).get("ici_bytes", 0.0)) / 2**30
+            print(f"| {a} | {s} | {g('all-gather'):.1f} | {g('all-reduce'):.1f} "
+                  f"| {g('reduce-scatter'):.1f} | {g('all-to-all'):.1f} "
+                  f"| {g('collective-permute'):.1f} |")
+
+
+def perf_tables():
+    for cell in ("qwen1.5-32b__train_4k", "mixtral-8x22b__train_4k",
+                 "mamba2-2.7b__prefill_32k"):
+        paths = sorted(glob.glob(f"experiments/perf/{cell}__it*.json"))
+        if not paths:
+            continue
+        print(f"\n#### {cell}\n")
+        print("| iteration | t_comp | t_mem | t_coll | bound | mfu* | "
+              "substitutions |")
+        print("|---|---|---|---|---|---|---|")
+        for p in paths:
+            with open(p) as f:
+                r = json.load(f)
+            subs = "; ".join(r.get("substitutions", [])) or "—"
+            print(f"| {r['label']} | {r['t_compute']:.3f} | {r['t_memory']:.3f}"
+                  f" | {r['t_collective']:.3f} | {r['bound']} "
+                  f"| {r['mfu_roofline']:.4f} | {subs} |")
+
+
+if __name__ == "__main__":
+    if sys.argv[1] == "dryrun":
+        dryrun_tables()
+    else:
+        perf_tables()

@@ -1,0 +1,32 @@
+"""The paper's own workload: 4096x4096 GEMM (and add/sub) in
+float / double / complex-float — Table 2 / Figs 7-9.
+
+Not a model config; consumed by benchmarks/ and examples/.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperWorkload:
+    n: int = 4096
+    dtypes: tuple = ("float32", "float64", "complex64")
+    block: int = 16          # the paper's CUDA block edge
+    # Table 2 wall-clock seconds (for the modeled comparison)
+    reference_times = {
+        ("xeon-e7-4860", "float32"): 991.96,
+        ("xeon-e7-4860", "float64"): 1455.27,
+        ("xeon-e7-4860", "complex64"): 1679.15,
+        ("tesla-c2050", "float32"): 2.49,
+        ("tesla-c2050", "float64"): 3.13,
+        ("tesla-c2050", "complex64"): 4.17,
+        ("tesla-c2050-shared", "float32"): 0.83,
+        ("tesla-c2050-shared", "float64"): 1.60,
+        ("tesla-c2050-shared", "complex64"): 2.07,
+        ("tesla-c1060", "float32"): 5.81,
+        ("tesla-c1060", "float64"): 8.56,
+        ("tesla-c1060", "complex64"): 18.07,
+    }
+
+
+CONFIG = PaperWorkload()

@@ -1,0 +1,26 @@
+"""qwen2-vl-2b [vlm]: 28L d_model=1536 12H (kv=2) d_ff=8960
+vocab=151936, M-RoPE, dynamic resolution. [arXiv:2409.12191]
+
+Vision frontend is a STUB per spec: input_specs() supplies aligned
+patch embeddings (added to the token embedding grid) plus (t, h, w)
+M-RoPE position streams. head_dim = 1536/12 = 128 -> mrope sections
+(16, 24, 24) over the 64 frequency slots, per the hf config.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    tie_embeddings=True,
+)

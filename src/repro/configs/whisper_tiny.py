@@ -1,0 +1,27 @@
+"""whisper-tiny [audio]: 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+
+Enc-dec; the conv frontend is a STUB per the task spec — input_specs()
+provides precomputed frame embeddings (B, 1500, 384). Whisper uses
+LayerNorm + GELU + absolute (sinusoidal) positions, no RoPE.
+[arXiv:2212.04356]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,                 # decoder layers
+    n_enc_layers=4,
+    enc_ctx=1500,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab=51865,
+    use_rope=False,
+    norm="ln",
+    mlp="gelu",
+    tie_embeddings=True,
+)

@@ -1,0 +1,32 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048, Mamba2 backbone with ONE
+weight-shared attention+MLP block (32H kv=32, d_ff=8192) invoked every
+6 layers with per-invocation LoRA, ssm_state=64. [arXiv:2411.15242]
+
+Simplification recorded (DESIGN §6): the shared block consumes
+concat(hidden, embedding) through a learned 2d->d projection; Zamba2's
+dual shared blocks are represented by the single shared block + LoRA.
+36 of 38 layers fall into 6 shared-block segments; the trailing 2
+layers are folded into the last segment period (attn_every=6 exact via
+n_layers=36+2 -> we use 36 scanned segment layers + 2 extra handled by
+segment count 6; recorded as 38 layers total with segments of 6 and a
+final segment of 8).  For scan regularity we round to 36 mamba layers
+in 6 segments + 2 standalone mamba layers appended.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=36,                # 6 segments x 6 (see note above)
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab=32000,
+    attn_every=6,
+    shared_attn_lora_rank=32,
+    ssm=SSMConfig(d_state=64, head_dim=64, expand=2, conv_width=4,
+                  chunk=128, n_groups=1),
+)

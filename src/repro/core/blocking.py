@@ -1,0 +1,155 @@
+"""Tile-size selection for the blocked GEMM — the paper's shared-memory
+sizing argument ("2 * 16 * 16 * 8 B = 4 KB <= 48 KB") redone for the TPU
+memory hierarchy.
+
+On the GPU the block size trades shared-memory footprint against
+occupancy; on TPU it trades VMEM footprint against DMA pipeline depth
+and MXU alignment. The constraints implemented here:
+
+  * every tile dim is a multiple of the MXU edge (128) where possible,
+    and at least the (sublane, lane) minimum for the dtype;
+  * A-tile + B-tile (double-buffered) + f32 accumulator must fit a VMEM
+    budget (default: half of VMEM, leaving room for Mosaic);
+  * maximise arithmetic intensity  AI = 2*bm*bn*bk / (bm*bk + bk*bn + bm*bn)
+    which is what makes the kernel compute-bound (paper claim C2).
+
+Also provides the HBM-traffic model used by the Fig.-8 reproduction:
+tiled GEMM reads A ceil(N/bn) times and B ceil(M/bm) times, which is the
+paper's reuse argument in byte form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    bm: int
+    bn: int
+    bk: int
+
+    def vmem_bytes(self, itemsize: int, double_buffer: bool = True) -> int:
+        mult = 2 if double_buffer else 1
+        tiles = (self.bm * self.bk + self.bk * self.bn) * itemsize * mult
+        acc = self.bm * self.bn * 4  # f32 accumulator scratch
+        return tiles + acc
+
+    def arithmetic_intensity(self, itemsize: int) -> float:
+        flops = 2.0 * self.bm * self.bn * self.bk
+        bytes_moved = (self.bm * self.bk + self.bk * self.bn) * itemsize
+        return flops / bytes_moved
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _round_down_pow2_mult(x: int, m: int) -> int:
+    """Largest multiple of m that is <= x (at least m)."""
+    return max(m, (x // m) * m)
+
+
+def choose_block_config(
+    m: int,
+    n: int,
+    k: int,
+    itemsize: int = 2,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+) -> BlockConfig:
+    """Pick (bm, bn, bk) for an (m, k) x (k, n) GEMM.
+
+    Strategy: start from MXU-aligned 512x512x512-ish tiles, clamp to the
+    problem, then shrink the largest dim until the double-buffered
+    working set fits the VMEM budget. bk is kept >= 512 when possible so
+    the k-grid is short (fewer accumulator passes), mirroring the
+    paper's 'one long k loop inside the block' structure.
+    """
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    lane = chip.lane
+    sub = chip.sublane(itemsize)
+
+    bm = min(_round_up(m, sub), 512)
+    bn = min(_round_up(n, lane), 512)
+    bk = min(_round_up(k, lane), 2048)
+    bm = _round_down_pow2_mult(bm, sub)
+    bn = _round_down_pow2_mult(bn, lane)
+    bk = _round_down_pow2_mult(bk, lane)
+
+    cfg = BlockConfig(bm, bn, bk)
+    while cfg.vmem_bytes(itemsize) > budget:
+        # Shrink the dim that frees the most bytes while hurting AI least:
+        # prefer shrinking bk first below 512, then the larger of bm/bn.
+        if cfg.bk > 512:
+            cfg = BlockConfig(cfg.bm, cfg.bn, _round_down_pow2_mult(cfg.bk // 2, lane))
+        elif cfg.bm >= cfg.bn and cfg.bm > sub:
+            cfg = BlockConfig(_round_down_pow2_mult(cfg.bm // 2, sub), cfg.bn, cfg.bk)
+        elif cfg.bn > lane:
+            cfg = BlockConfig(cfg.bm, _round_down_pow2_mult(cfg.bn // 2, lane), cfg.bk)
+        elif cfg.bk > lane:
+            cfg = BlockConfig(cfg.bm, cfg.bn, _round_down_pow2_mult(cfg.bk // 2, lane))
+        else:
+            break  # minimum tile; give up shrinking
+    return cfg
+
+
+def hbm_traffic_bytes(
+    m: int, n: int, k: int, cfg: BlockConfig, itemsize: int
+) -> int:
+    """Bytes moved HBM->VMEM by the tiled kernel (the Fig.-8 model).
+
+    A is streamed once per N-block column, B once per M-block row, C is
+    written once. This is exactly the paper's reuse argument: blocking
+    divides global-memory traffic by the block edge.
+    """
+    n_m = math.ceil(m / cfg.bm)
+    n_n = math.ceil(n / cfg.bn)
+    a_bytes = m * k * itemsize * n_n
+    b_bytes = k * n * itemsize * n_m
+    c_bytes = m * n * itemsize
+    return a_bytes + b_bytes + c_bytes
+
+
+def naive_traffic_bytes(m: int, n: int, k: int, itemsize: int) -> int:
+    """Traffic model for the hierarchy-blind kernel (paper Listing 3).
+
+    Each output element streams a full row of A and column of B with no
+    cross-thread reuse: A read n times, B read m times.
+    """
+    return (m * k * n + k * n * m + m * n) * itemsize
+
+
+def gemm_time_model(
+    m: int,
+    n: int,
+    k: int,
+    itemsize: int,
+    cfg: BlockConfig | None,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+) -> dict:
+    """Roofline time estimate for one GEMM on `chip`.
+
+    cfg=None means the naive traffic model. Returns both terms plus the
+    bound classification — the machinery behind the modeled Table-2
+    reproduction.
+    """
+    flops = 2.0 * m * n * k
+    if cfg is None:
+        traffic = naive_traffic_bytes(m, n, k, itemsize)
+    else:
+        traffic = hbm_traffic_bytes(m, n, k, cfg, itemsize)
+    t_compute = flops / chip.peak_flops(itemsize)
+    t_memory = traffic / chip.hbm_bw
+    return {
+        "flops": flops,
+        "bytes": traffic,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_total": max(t_compute, t_memory),
+        "bound": "compute" if t_compute >= t_memory else "memory",
+        "arithmetic_intensity": flops / traffic,
+    }

@@ -1,0 +1,109 @@
+"""The GEMM chokepoint.
+
+Every dense contraction in the model zoo — QKV/O projections, FFN, MoE
+expert GEMMs, logits, SSD chunk matmuls — routes through `matmul()` /
+`dense()` here, so switching the global backend swaps the paper's tiled
+kernel in and out of the *whole framework* (the reproduce-vs-optimise
+axis of EXPERIMENTS.md).
+
+Responsibilities on top of kernels.ops:
+  * batched / n-d shapes (leading dims folded into M);
+  * complex64 decomposition into real GEMMs (core.precision, Table 2);
+  * f64 routing (no MXU path — XLA or interpret only);
+  * a custom VJP so the Pallas backends train: both cotangent GEMMs
+    recurse through the same chokepoint.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as _prec
+from repro.kernels import ops as _ops
+
+_state = threading.local()
+
+
+def _backend() -> str:
+    return getattr(_state, "backend", "xla")
+
+
+def set_default_backend(name: str) -> None:
+    assert name in _ops.MATMUL_BACKENDS, name
+    _state.backend = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    prev = _backend()
+    set_default_backend(name)
+    try:
+        yield
+    finally:
+        set_default_backend(prev)
+
+
+def _matmul_2d(a, b, backend, out_dtype):
+    if jnp.issubdtype(a.dtype, jnp.complexfloating):
+        if backend == "xla":
+            return _ops.matmul(a, b, backend="xla", out_dtype=out_dtype)
+        real = lambda x, y: _ops.matmul(x, y, backend=backend)
+        return _prec.complex_matmul(a, b, real, algorithm="gauss3")
+    if a.dtype == jnp.float64 and backend in ("pallas", "naive"):
+        # no MXU f64 path: compiled-TPU f64 falls back to XLA emulation.
+        backend = "xla"
+    return _ops.matmul(a, b, backend=backend, out_dtype=out_dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _matmul_vjp(a, b, backend, out_dtype):
+    return _matmul_2d(a, b, backend, out_dtype)
+
+
+def _matmul_fwd(a, b, backend, out_dtype):
+    return _matmul_2d(a, b, backend, out_dtype), (a, b)
+
+
+def _matmul_bwd(backend, out_dtype, res, g):
+    a, b = res
+    g = g.astype(a.dtype)
+    da = _matmul_2d(g, b.T, backend, a.dtype)
+    db = _matmul_2d(a.T, g, backend, b.dtype)
+    return da, db
+
+
+_matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
+           backend: str | None = None) -> jnp.ndarray:
+    """A @ B for a: (..., M, K), b: (K, N) or (..., K, N) matching."""
+    backend = backend or _backend()
+    out_dtype = out_dtype or a.dtype
+    if a.ndim == b.ndim == 2:
+        return _matmul_vjp(a, b, backend, out_dtype)
+    if b.ndim == 2:
+        lead = a.shape[:-1]
+        out = _matmul_vjp(a.reshape(-1, a.shape[-1]), b, backend, out_dtype)
+        return out.reshape(*lead, b.shape[-1])
+    # batched-batched: vmap the 2D chokepoint over leading dims.
+    assert a.shape[:-2] == b.shape[:-2], (a.shape, b.shape)
+    lead = a.shape[:-2]
+    af = a.reshape((-1,) + a.shape[-2:])
+    bf = b.reshape((-1,) + b.shape[-2:])
+    out = jax.vmap(lambda x, y: _matmul_vjp(x, y, backend, out_dtype))(af, bf)
+    return out.reshape(lead + out.shape[-2:])
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
+          *, out_dtype=None, backend: str | None = None) -> jnp.ndarray:
+    """y = x @ w (+ b) for x: (..., K), w: (K, N) — the layer-level API."""
+    y = matmul(x, w, out_dtype=out_dtype, backend=backend)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y

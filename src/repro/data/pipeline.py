@@ -1,0 +1,75 @@
+"""Data pipeline: deterministic, shard-aware token streams.
+
+Two sources:
+  * SyntheticLM — seeded Zipf-ish token stream; (step, shard) fully
+    determines contents, so restarts/elastic re-shards reproduce the
+    exact batch sequence (a fault-tolerance requirement, not a toy).
+  * MemmapCorpus — flat binary token file, strided by (step, shard).
+
+Both yield {"tokens": (B, S), "labels": (B, S)} with labels = tokens
+shifted left (next-token prediction), last label masked.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    batch: int                 # per-host batch
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def batch_at(self, step: int, shard: int = 0, n_shards: int = 1):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard, n_shards]))
+        # Zipf-distributed ids clipped to vocab — realistic token skew.
+        toks = rng.zipf(self.zipf_a, size=(self.batch, self.seq_len + 1))
+        toks = (toks - 1) % self.vocab
+        tokens = toks[:, :-1].astype(np.int32)
+        labels = toks[:, 1:].astype(np.int32).copy()
+        labels[:, -1] = -1
+        return {"tokens": tokens, "labels": labels}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MemmapCorpus:
+    path: str
+    vocab: int
+    seq_len: int
+    batch: int
+    dtype: str = "uint16"
+
+    def _data(self):
+        return np.memmap(self.path, dtype=self.dtype, mode="r")
+
+    def n_batches(self) -> int:
+        n_tok = self._data().shape[0]
+        return n_tok // (self.batch * (self.seq_len + 1))
+
+    def batch_at(self, step: int, shard: int = 0, n_shards: int = 1):
+        data = self._data()
+        span = self.batch * (self.seq_len + 1)
+        n = data.shape[0] // span
+        idx = (step * n_shards + shard) % max(n, 1)
+        chunk = np.asarray(data[idx * span:(idx + 1) * span], dtype=np.int64)
+        chunk = (chunk % self.vocab).reshape(self.batch, self.seq_len + 1)
+        tokens = chunk[:, :-1].astype(np.int32)
+        labels = chunk[:, 1:].astype(np.int32).copy()
+        labels[:, -1] = -1
+        return {"tokens": tokens, "labels": labels}
+
+
+def write_corpus(path: str, tokens: np.ndarray, dtype: str = "uint16"):
+    np.asarray(tokens, dtype=dtype).tofile(path)

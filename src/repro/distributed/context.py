@@ -1,0 +1,80 @@
+"""Logical activation-sharding constraints.
+
+Model code calls `constrain(x, "dp", None, "tp", None)` at layer
+boundaries; when a mesh context is active (the launcher/dry-run), this
+becomes jax.lax.with_sharding_constraint with the logical axes mapped
+onto the physical mesh — pinning the batch to the data axis and heads /
+expert / channel dims to the model axis so the SPMD partitioner never
+falls back to replication (the 204 GiB/device failure mode recorded in
+EXPERIMENTS §Dry-run). With no context (CPU tests, examples) it is a
+no-op.
+
+Logical axes: "dp" -> ("pod","data") | ("data",)   batch-like dims
+              "tp" -> "model"                       head/channel dims
+Axes that do not divide the dim size are dropped (replicated) rather
+than erroring — MQA heads, batch-1 long-context, 8-expert banks.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def _multi_pod() -> bool:
+    return getattr(_state, "multi_pod", False)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, *, multi_pod: bool = False):
+    prev = (current_mesh(), _multi_pod())
+    _state.mesh, _state.multi_pod = mesh, multi_pod
+    try:
+        yield
+    finally:
+        _state.mesh, _state.multi_pod = prev
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return math.prod(mesh.shape[n] for n in name)
+    return mesh.shape[name]
+
+
+def constrain(x, *logical):
+    """logical per dim: "dp" / "tp" (pin to that mesh axis), None (pin
+    to REPLICATED — a demand, not a default), or "free"
+    (P.UNCONSTRAINED — let the partitioner choose; use for dims like a
+    40-head axis that XLA can factor 8x2 on a 16-wide mesh axis, where
+    forcing replication triggers involuntary-remat copies; measured in
+    EXPERIMENTS §Perf it1)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    dp = ("pod", "data") if _multi_pod() else ("data",)
+    parts = []
+    for dim, l in zip(x.shape, logical):
+        if l is None:
+            parts.append(None)
+            continue
+        if l == "free":
+            parts.append(P.UNCONSTRAINED)
+            continue
+        phys = dp if l == "dp" else "model"
+        if dim % _axis_size(mesh, phys) == 0:
+            parts.append(phys)
+        else:
+            parts.append(P.UNCONSTRAINED)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

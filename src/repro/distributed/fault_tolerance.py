@@ -1,0 +1,130 @@
+"""Fault tolerance: supervised training, straggler detection, elastic
+re-meshing.
+
+On a real 1000+-node fleet the failure modes are: worker crash (host or
+chip), hung collective (straggler turned zombie), and capacity loss
+(pod down => smaller mesh). The mechanisms here map 1:1:
+
+  * Supervisor.run_resilient — step-scoped try/except; on failure,
+    restore latest checkpoint and continue; bounded restarts.
+  * StragglerDetector — per-step EWMA; steps slower than
+    `threshold x EWMA` are flagged (on TPU fleets, the signal feeding
+    hot-swap / re-scheduling decisions).
+  * elastic_mesh_shape — given the surviving chip count, pick the
+    largest (data, model) mesh that keeps the model axis intact; the
+    checkpoint's logical specs re-lay params onto it (checkpointer).
+  * FailureInjector — deterministic simulated failures for tests and
+    the resilience example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_at_steps: tuple = ()
+    fail_once: bool = True
+
+    def __post_init__(self):
+        self._fired = set()
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            if self.fail_once:
+                self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+class StragglerDetector:
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 warmup: int = 3):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.flagged: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.n <= self.warmup:        # compile steps excluded
+            return False
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = dt > self.threshold * self.ewma
+        if is_straggler:
+            self.flagged.append((step, dt, self.ewma))
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+def elastic_mesh_shape(n_devices: int, model_parallel: int) -> tuple:
+    """Largest (data, model) grid for the surviving devices, keeping the
+    model axis intact (TP groups cannot shrink without resharding the
+    layer math)."""
+    assert n_devices >= model_parallel, (n_devices, model_parallel)
+    data = n_devices // model_parallel
+    return (data, model_parallel)
+
+
+class Supervisor:
+    """Wraps a step function with checkpoint-restart semantics."""
+
+    def __init__(self, checkpointer, *, max_restarts: int = 3,
+                 checkpoint_every: int = 50):
+        self.ckpt = checkpointer
+        self.max_restarts = max_restarts
+        self.checkpoint_every = checkpoint_every
+        self.restarts = 0
+        self.straggler = StragglerDetector()
+
+    def run_resilient(
+        self,
+        state,                                    # (params, opt_state, ...)
+        step_fn: Callable,                        # (state, step) -> state, metrics
+        n_steps: int,
+        *,
+        start_step: int = 0,
+        injector: Optional[FailureInjector] = None,
+        on_metrics: Optional[Callable] = None,
+        spec=None,
+    ):
+        step = start_step
+        while step < n_steps:
+            try:
+                if injector is not None:
+                    injector.check(step)
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, step)
+                dt = time.perf_counter() - t0
+                self.straggler.observe(step, dt)
+                if on_metrics is not None:
+                    on_metrics(step, metrics, dt)
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    self.ckpt.save(step, state, spec=spec, blocking=False)
+            except Exception as e:   # noqa: BLE001 — supervisor boundary
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                # quiesce the async writer FIRST — an in-flight save must
+                # become visible before we look for the latest step
+                # (regression-tested: test_supervisor_recovers_...)
+                self.ckpt.wait()
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    continue   # no checkpoint yet: retry step with live state
+                state = self.ckpt.restore(latest, state)
+                step = latest
+        self.ckpt.wait()
+        return state, step

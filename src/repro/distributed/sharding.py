@@ -1,0 +1,195 @@
+"""Sharding rules: param-path regex -> PartitionSpec.
+
+The scheme (DESIGN §5): TP over "model", FSDP over "data", DP over
+("pod", "data") for activations. Expert banks get EP over "model".
+Scanned stacks carry a leading layer dim that is never sharded.
+
+These rules are *logical*: the same table drives the 16x16 single-pod
+mesh, the 2x16x16 multi-pod mesh, and any elastic re-mesh — only the
+mesh object changes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (regex over "/"-joined param path, CANDIDATE specs in priority order,
+# WITHOUT the scan-layer dim). The first candidate whose named axes all
+# divide the corresponding dim is used; as a last resort failing axes
+# are dropped (replicated). First regex match wins.
+_RULES = (
+    # MoE expert banks (E, D, F) / (E, F, D): EP on E + FSDP on middle;
+    # when E < |model| (Mixtral 8e on a 16-wide axis) fall back to
+    # TP+FSDP inside each expert.
+    (r"moe/w_(gate|up)$",        (P("model", "data", None),
+                                  P(None, "data", "model"))),
+    (r"moe/w_down$",             (P("model", "data", None),
+                                  P(None, "model", "data"))),
+    (r"moe/router/w$",           (P("data", None),)),
+    # attention projections
+    (r"attn/w[qkv]/w$",          (P("data", "model"),)),
+    (r"attn/w[qkv]/b$",          (P("model"),)),
+    (r"attn/wo/w$",              (P("model", "data"),)),
+    (r"attn/wo/b$",              (P(None),)),
+    (r"cross_attn/w[qkv]/w$",    (P("data", "model"),)),
+    (r"cross_attn/w[qkv]/b$",    (P("model"),)),
+    (r"cross_attn/wo/w$",        (P("model", "data"),)),
+    (r"cross_attn/wo/b$",        (P(None),)),
+    # MLPs
+    (r"(mlp|dense)/w_(gate|up|in)/w$",  (P("data", "model"),)),
+    (r"(mlp|dense)/w_(down|out)/w$",    (P("model", "data"),)),
+    (r"(mlp|dense)/w_(gate|up|in)/b$",  (P("model"),)),
+    (r"(mlp|dense)/w_(down|out)/b$",    (P(None),)),
+    # Mamba2
+    (r"mamba/in_proj/w$",        (P("data", "model"),)),
+    # B/C/dt projection + conv: replicated output (tiny; avoids the
+    # per-layer broadcast of stranded state channels — §Perf mamba2 it4)
+    (r"mamba/in_proj_bc/w$",     (P("data", None),)),
+    (r"mamba/conv_bc_w$",        (P(None, None),)),
+    (r"mamba/conv_bc_b$",        (P(None),)),
+    (r"mamba/out_proj/w$",       (P("model", "data"),)),
+    (r"mamba/conv_w$",           (P(None, "model"),)),
+    (r"mamba/conv_b$",           (P("model"),)),
+    (r"mamba/(A_log|D|dt_bias)$", (P("model"),)),
+    (r"mamba/norm/scale$",       (P("model"),)),
+    # Zamba2 shared block extras
+    (r"shared/in_proj/w$",       (P("data", "model"),)),
+    (r"lora_a$",                 (P(None, "data", None),)),
+    (r"lora_b$",                 (P(None, None, "model"),)),
+    # embeddings / head (vocab is padded to 256 so these divide)
+    (r"embed/w$",                (P("model", "data"),)),
+    (r"lm_head/w$",              (P("data", "model"),)),
+    # norms and anything 1-D
+    (r".*",                      (P(),)),
+)
+
+# param paths that carry leading stacked-layer dims (scan): the spec is
+# shifted right by the number of stack dims.
+_STACK1 = re.compile(r"^(layers|enc_layers|dec_layers)/|^hybrid/(shared_conv)?")
+_STACK2 = re.compile(r"^hybrid/mamba/")
+_STACK1_HYBRID = re.compile(r"^hybrid/(lora_a|lora_b)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _stack_dims(path_s: str) -> int:
+    if _STACK2.match(path_s):
+        return 2                       # (n_seg, per_seg, ...)
+    if _STACK1_HYBRID.match(path_s):
+        return 1                       # (n_seg, ...)
+    if path_s.startswith("hybrid/shared"):
+        return 0
+    if _STACK1.match(path_s):
+        return 1
+    return 0
+
+
+def _axis_size(mesh: Optional[Mesh], name) -> int:
+    if mesh is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _fits(spec_parts, shape, mesh) -> bool:
+    for part, dim in zip(spec_parts, shape):
+        if part is None:
+            continue
+        if dim % _axis_size(mesh, part) != 0:
+            return False
+    return True
+
+
+def spec_for(path_s: str, shape: tuple, mesh: Optional[Mesh] = None) -> P:
+    ndim = len(shape)
+    stack = _stack_dims(path_s)
+    candidates = (P(),)
+    for pat, specs in _RULES:
+        if re.search(pat, path_s):
+            candidates = specs
+            break
+
+    def expand(spec) -> list:
+        parts = ([None] * stack) + list(spec)
+        if len(parts) > ndim:          # e.g. biases matched to 2D rule
+            parts = parts[:ndim]
+        parts += [None] * (ndim - len(parts))
+        return parts
+
+    for spec in candidates:
+        parts = expand(spec)
+        if _fits(parts, shape, mesh):
+            return P(*parts)
+    # last resort: drop failing axes (replicate those dims)
+    parts = expand(candidates[-1])
+    parts = [p if p is not None and shape[i] % _axis_size(mesh, p) == 0
+             else None for i, p in enumerate(parts)]
+    return P(*parts)
+
+
+def param_specs(params, mesh: Optional[Mesh] = None) -> Any:
+    """Pytree of PartitionSpec matching `params` (shape/mesh aware)."""
+    def fn(path, leaf):
+        return spec_for(_path_str(path), tuple(leaf.shape), mesh)
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def data_spec(ndim: int, *, multi_pod: bool) -> P:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return P(dp, *([None] * (ndim - 1)))
+
+
+def cache_specs(cache, mesh: Mesh, *, multi_pod: bool) -> Any:
+    """KV / SSM state caches: batch over DP when divisible, kv-heads /
+    SSD-heads / conv channels over "model" when divisible (MQA and
+    batch-1 long-context leaves fall back to replication — recorded in
+    EXPERIMENTS.md as a hillclimb lever)."""
+    import math
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp = math.prod(mesh.shape[a] for a in dp_axes)
+    tp = mesh.shape["model"]
+
+    def fn(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        parts: list = [None] * nd
+        key = ps.rsplit("/", 1)[-1]
+        if key in ("k", "v"):          # (*stack, B, T, H, D)
+            b_ax, h_ax = nd - 4, nd - 2
+        elif key == "ssd":             # (*stack, B, H, P, N)
+            b_ax, h_ax = nd - 4, nd - 3
+        elif key == "conv":            # (*stack, B, W-1, C)
+            b_ax, h_ax = nd - 3, nd - 1
+        else:
+            return P(*parts)
+        if leaf.shape[b_ax] % dp == 0:
+            parts[b_ax] = dp_axes
+        if leaf.shape[h_ax] % tp == 0:
+            parts[h_ax] = "model"
+        return P(*parts)
+    return jax.tree_util.tree_map_with_path(fn, cache)
+
+
+def shardings_for(mesh: Mesh, specs) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,86 @@
+"""Elementwise Pallas kernels — the paper's matrix add/sub study (Fig 9).
+
+The paper's point is that these ops are bandwidth-bound and gain nothing
+from the accelerator; we implement them anyway (they are real framework
+substrate — residual adds, bias adds) and let the benchmark demonstrate
+the asymmetry via core.intensity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _binary_kernel(a_ref, b_ref, o_ref, *, op: str):
+    a, b = a_ref[...], b_ref[...]
+    if op == "add":
+        o_ref[...] = a + b
+    elif op == "sub":
+        o_ref[...] = a - b
+    elif op == "mul":
+        o_ref[...] = a * b
+    else:
+        raise ValueError(op)
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0, 0] * x_ref[...] + y_ref[...]
+
+
+def binary_op(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    op: str = "add",
+    *,
+    bm: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C = A (op) B over 2D arrays, row-blocked."""
+    assert a.shape == b.shape and a.ndim == 2
+    m, n = a.shape
+    bm = min(bm, m)
+    assert m % bm == 0
+    kernel = functools.partial(_binary_kernel, op=op)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def axpy(
+    alpha: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """alpha*x + y (scalar alpha prefetched once, not per-block)."""
+    assert x.shape == y.shape and x.ndim == 2
+    m, n = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0
+    alpha = jnp.asarray(alpha, x.dtype).reshape((1, 1))
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(alpha, x, y)

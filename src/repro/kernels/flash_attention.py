@@ -1,0 +1,152 @@
+"""Flash (online-softmax) attention as a Pallas TPU kernel.
+
+This is the paper's core insight — stage tiles in scratchpad memory and
+maximise reuse before touching HBM — applied to the framework's second
+GEMM-shaped hot spot. The S = QK^T matrix is never materialised in HBM;
+(bq, d) query tiles stay resident in VMEM while (bk, d) key/value tiles
+stream through, with the running max/denominator kept in VMEM scratch
+(the 'register accumulator' of Listing 4, generalised to softmax).
+
+Supports causal masking, sliding windows (Mixtral), and GQA via an
+index-map trick: query head h reads kv head h // group, so kv tensors
+are never physically repeated.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_PLTPU = True
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _HAS_PLTPU = False
+
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, n_kv: int, bq: int, bk: int, scale: float,
+    causal: bool, window: int | None, q_offset: int,
+):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = pl.program_id(1) * bq + q_offset
+    k_start = kv_i * bk
+
+    # Block-level skip: entirely above the causal diagonal or entirely
+    # left of the sliding window -> no compute (DMA still streams, the
+    # cost model in core/blocking charges it; see EXPERIMENTS §Perf).
+    run = True
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq, LANES)
+        s_max = jnp.max(s, axis=1, keepdims=True)         # (bq, 1)
+        m_new = jnp.maximum(m_prev, s_max)                # broadcast
+        alpha = jnp.exp(m_prev - m_new)                   # (bq, LANES)
+        p = jnp.exp(s - m_new[:, :1])                     # (bq, bk)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(
+            p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,           # [B*H,  Tq, D]
+    k: jnp.ndarray,           # [B*Hkv, Tk, D]
+    v: jnp.ndarray,           # [B*Hkv, Tk, D]
+    *,
+    group: int = 1,           # H // Hkv
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    bq: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, tq, d = q.shape
+    bhkv, tk, dk = k.shape
+    assert d == dk and v.shape == k.shape
+    assert bh == bhkv * group, (bh, bhkv, group)
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    assert tq % bq == 0 and tk % bk == 0, (tq, tk, bq, bk)
+    n_kv = tk // bk
+
+    kernel = functools.partial(
+        _flash_kernel, n_kv=n_kv, bq=bq, bk=bk, scale=scale,
+        causal=causal, window=window, q_offset=q_offset)
+
+    if _HAS_PLTPU:
+        scratch = [
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+        ]
+    else:  # pragma: no cover
+        scratch = []
+
+    params = {}
+    if _HAS_PLTPU and not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, tq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **params,
+    )(q, k, v)

@@ -1,0 +1,126 @@
+"""jit'd wrappers around the Pallas kernels.
+
+Handles the plumbing the kernels themselves keep out of scope: backend
+selection, shape padding to block multiples, block-size choice via
+core.blocking (the paper's shared-memory sizing argument), and the
+interpret-mode fallback used on this CPU-only container.
+
+Backends:
+  xla               jnp.matmul — what the multi-pod dry-run compiles
+  pallas            tiled Pallas kernel, compiled for TPU (Listing 4)
+  pallas_interpret  same kernel, interpreter — CPU validation
+  naive             hierarchy-blind Pallas kernel (Listing 3)
+  naive_interpret   its interpreter twin
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking, hw
+from repro.kernels import elementwise as _ew
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import matmul_naive as _mmn
+from repro.kernels import ref as _ref
+
+MATMUL_BACKENDS = (
+    "xla", "pallas", "pallas_interpret", "naive", "naive_interpret",
+)
+
+
+def _pad2(x: jnp.ndarray, m_to: int, n_to: int) -> jnp.ndarray:
+    m, n = x.shape
+    if m == m_to and n == n_to:
+        return x
+    return jnp.pad(x, ((0, m_to - m), (0, n_to - n)))
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    backend: str = "xla",
+    out_dtype=None,
+    block: blocking.BlockConfig | None = None,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+) -> jnp.ndarray:
+    """2D real GEMM through the selected backend, padding as needed."""
+    assert a.ndim == 2 and b.ndim == 2, (a.shape, b.shape)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    out_dtype = out_dtype or a.dtype
+
+    if backend == "xla":
+        return _ref.matmul_ref(a, b, out_dtype=out_dtype)
+
+    interpret = backend.endswith("interpret")
+    itemsize = jnp.dtype(a.dtype).itemsize
+
+    if backend.startswith("naive"):
+        sub = chip.sublane(itemsize)
+        mp, np_ = _round_up(m, sub), _round_up(n, chip.lane)
+        out = _mmn.matmul_naive(
+            _pad2(a, mp, k), _pad2(b, k, np_),
+            out_dtype=out_dtype, interpret=interpret)
+        return out[:m, :n]
+
+    if block is None:
+        block = blocking.choose_block_config(m, n, k, itemsize, chip)
+    mp = _round_up(m, block.bm)
+    np_ = _round_up(n, block.bn)
+    kp = _round_up(k, block.bk)
+    out = _mm.matmul_tiled(
+        _pad2(a, mp, kp), _pad2(b, kp, np_),
+        bm=block.bm, bn=block.bn, bk=block.bk,
+        out_dtype=out_dtype, interpret=interpret)
+    return out[:m, :n]
+
+
+def add(a, b, *, backend: str = "xla", interpret: bool | None = None):
+    if backend == "xla":
+        return _ref.add_ref(a, b)
+    return _ew.binary_op(a, b, "add", interpret=backend.endswith("interpret"))
+
+
+def sub(a, b, *, backend: str = "xla"):
+    if backend == "xla":
+        return _ref.sub_ref(a, b)
+    return _ew.binary_op(a, b, "sub", interpret=backend.endswith("interpret"))
+
+
+def flash_attention(
+    q: jnp.ndarray,            # [B, Tq, H, D]
+    k: jnp.ndarray,            # [B, Tk, Hkv, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    backend: str = "xla",
+    bq: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    """Layout-normalising wrapper: model code uses [B, T, H, D]."""
+    if backend == "xla":
+        return _ref.attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset)
+    b_, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    g = h // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b_ * h, tq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b_ * hkv, tk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b_ * hkv, tk, d)
+    o = _fa.flash_attention(
+        qf, kf, vf, group=g, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk,
+        interpret=backend.endswith("interpret"))
+    return o.reshape(b_, h, tq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the allclose sweeps in tests/ and the
+'sequential algorithm' stand-ins for the paper's CPU baselines.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation (the paper's Cauchy product)."""
+    if out_dtype is None:
+        out_dtype = a.dtype
+    acc_dtype = jnp.float64 if a.dtype == jnp.float64 else (
+        jnp.complex64 if jnp.issubdtype(a.dtype, jnp.complexfloating) else jnp.float32)
+    return jnp.matmul(a, b, preferred_element_type=acc_dtype).astype(out_dtype)
+
+
+def add_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a + b
+
+
+def sub_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a - b
+
+
+def saxpy_ref(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return alpha * x + y
+
+
+def attention_ref(
+    q: jnp.ndarray,              # [B, Tq, H, D]
+    k: jnp.ndarray,              # [B, Tk, Hkv, D]
+    v: jnp.ndarray,              # [B, Tk, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,   # sliding-window size (None = full)
+    scale: float | None = None,
+    q_offset: int = 0,           # absolute position of q[0] (for decode)
+) -> jnp.ndarray:
+    """Dense softmax attention oracle with GQA broadcast + masks."""
+    b, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    assert h % hkv == 0
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # broadcast kv heads across the query-head group
+    kf = jnp.repeat(kf, g, axis=2)
+    vf = jnp.repeat(vf, g, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    q_pos = jnp.arange(tq)[:, None] + q_offset
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

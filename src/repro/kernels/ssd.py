@@ -1,0 +1,152 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk block.
+
+This is the paper's tiling idea applied along the *time* axis: each
+grid cell owns one (batch, head, chunk) tile; the decay mask, the
+C·Bᵀ score matrix and the chunk-local output all live in VMEM —
+exactly the tensors that dominate HBM traffic in the XLA lowering
+(EXPERIMENTS §Perf, mamba2 cell).
+
+Per cell (Q = chunk, P = head_dim, N = d_state), all f32 in VMEM:
+    cs    = cumsum(a)                      (Q,)
+    L     = exp(cs_i - cs_j) * [j <= i]    (Q, Q)   decay mask
+    S     = (C Bᵀ) ⊙ L                     (Q, Q)   MXU matmul
+    y     = S x                            (Q, P)   MXU matmul
+    state = (B ⊙ exp(cs_Q - cs))ᵀ x        (N, P)   chunk state out
+
+The inter-chunk recurrence (rank-N, tiny) and the state→output term
+stay in jnp (they are O(L·N·P), not the bottleneck). ops.ssd_pallas
+composes both; ref oracle = models.ssm.ssd_chunked.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_PLTPU = True
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _HAS_PLTPU = False
+
+
+def _ssd_chunk_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref):
+    q = x_ref.shape[2]
+    x = x_ref[0, 0].astype(jnp.float32)       # (Q, P)
+    a = a_ref[0, 0].astype(jnp.float32)       # (Q,)
+    b = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+
+    cs = jnp.cumsum(a)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    ldec = jnp.where(jj <= ii, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+
+    scores = jax.lax.dot_general(                     # C Bᵀ: (Q, Q)
+        c, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(                          # (S ⊙ L) x: (Q, P)
+        scores * ldec, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    decay_end = jnp.exp(cs[-1] - cs)                  # (Q,)
+    state = jax.lax.dot_general(                      # Bᵀ diag(d) x: (N, P)
+        b * decay_end[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    state_ref[0, 0] = state.astype(state_ref.dtype)
+
+
+def ssd_intra_chunk(
+    x: jnp.ndarray,    # (BH, nc, Q, P) — dt-scaled inputs
+    a: jnp.ndarray,    # (BH, nc, Q)    — dt*A log decays
+    b: jnp.ndarray,    # (BH, nc, Q, N)
+    c: jnp.ndarray,    # (BH, nc, Q, N)
+    *,
+    interpret: bool = False,
+):
+    """Returns (y_diag (BH, nc, Q, P), states (BH, nc, N, P))."""
+    bh, nc, q, p = x.shape
+    n = b.shape[-1]
+    grid = (bh, nc)
+    params = {}
+    if _HAS_PLTPU and not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        )
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+        **params,
+    )(x, a, b, c)
+
+
+def ssd_pallas(
+    x: jnp.ndarray,    # (B, L, H, P) — dt-scaled
+    a: jnp.ndarray,    # (B, L, H)
+    b_: jnp.ndarray,   # (B, L, G, N)
+    c_: jnp.ndarray,   # (B, L, G, N)
+    chunk: int,
+    *,
+    interpret: bool = False,
+):
+    """Drop-in for models.ssm.ssd_chunked (same contract) with the
+    intra-chunk work in the Pallas kernel."""
+    bsz, l, h, p = x.shape
+    g, n = b_.shape[-2:]
+    rep = h // g
+    assert l % chunk == 0
+    nc = l // chunk
+
+    # (B, L, H, *) -> (B*H, nc, Q, *)
+    xk = x.transpose(0, 2, 1, 3).reshape(bsz * h, nc, chunk, p)
+    ak = a.transpose(0, 2, 1).reshape(bsz * h, nc, chunk)
+    bk = jnp.repeat(b_, rep, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(bsz * h, nc, chunk, n)
+    ck = jnp.repeat(c_, rep, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(bsz * h, nc, chunk, n)
+
+    y_diag, states = ssd_intra_chunk(xk, ak, bk, ck, interpret=interpret)
+
+    # inter-chunk recurrence in jnp (tiny rank-N state)
+    ac = ak.reshape(bsz, h, nc, chunk)
+    a_cum = jnp.cumsum(ac, axis=-1)
+    chunk_decay = jnp.exp(a_cum[..., -1])                  # (B,H,nc)
+    states = states.reshape(bsz, h, nc, n, p)
+
+    def step(s, inp):
+        st, dec = inp
+        return s * dec[..., None, None] + st, s
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    s_final, prev = jax.lax.scan(
+        step, s0, (states.transpose(2, 0, 1, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev = prev.transpose(1, 2, 0, 3, 4)                   # (B,H,nc,N,P)
+
+    state_decay = jnp.exp(a_cum)                           # (B,H,nc,Q)
+    ck5 = ck.reshape(bsz, h, nc, chunk, n)
+    y_off = jnp.einsum("bhcqn,bhcnp,bhcq->bhcqp", ck5, prev, state_decay)
+    y = y_diag.reshape(bsz, h, nc, chunk, p) + y_off
+    y = y.reshape(bsz, h, l, p).transpose(0, 2, 1, 3)      # (B,L,H,P)
+    # final state layout to match ssd_chunked: (B, H, P, N)
+    return y, s_final.swapaxes(-1, -2)

@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --reduced --batch 4 --prompt-len 32 --gen 16
+
+Serving loop structure (the production shape of it):
+  * one jitted prefill (fills the KV/state cache, returns first token)
+  * one jitted serve_step reused for every subsequent token
+  * continuous batching hooks: the cache is (B, ...) and `pos` is
+    per-batch-uniform here; slot-level scheduling is the next layer up.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import model as M
+from repro.training import train_loop as TL
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    rng = np.random.default_rng(args.seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    b, t = args.batch, args.prompt_len
+    max_len = t + args.gen
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (b, t)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros((b, t, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+        pos = np.broadcast_to(np.arange(t)[None, :, None], (b, t, 3))
+        batch["positions"] = jnp.asarray(pos, jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.enc_ctx, cfg.d_model)), jnp.float32)
+
+    prefill = jax.jit(TL.make_prefill(cfg), donate_argnums=(2,))
+    serve_step = jax.jit(TL.make_serve_step(cfg), donate_argnums=(3,))
+
+    cache = M.init_cache(cfg, b, max_len)
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    out_tokens = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = serve_step(params, tok, jnp.int32(t + i), cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} prefill({b}x{t}) {t_prefill*1e3:.0f}ms, "
+          f"decode {args.gen-1} steps {t_decode*1e3:.0f}ms "
+          f"({(args.gen-1)*b/max(t_decode,1e-9):.1f} tok/s)")
+    print("generated ids[0,:16]:", gen[0, :16].tolist())
+    assert np.isfinite(gen).all()
+    return gen
+
+
+if __name__ == "__main__":
+    main()

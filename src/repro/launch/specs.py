@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation: the dry-run lowers against these (weak-type
+correct, shardable), exactly the shannon/kernels pattern. Modality
+frontends are STUBS per spec — whisper gets precomputed frame
+embeddings, qwen2-vl gets aligned patch embeddings + M-RoPE position
+streams.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell, get_shape
+from repro.models import model as M
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell):
+    b, s = cell.global_batch, cell.seq_len
+    batch = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["positions"] = sds((b, s, 3), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = sds((b, cfg.enc_ctx, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, cell: ShapeCell):
+    batch = train_batch_specs(cfg, cell)
+    batch.pop("labels")
+    return batch
+
+
+def cache_specs_struct(cfg: ModelConfig, cell: ShapeCell):
+    """ShapeDtypeStructs of the serving cache at this cell's length."""
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, cell.global_batch, cell.seq_len))
+
+
+def decode_inputs(cfg: ModelConfig, cell: ShapeCell):
+    b = cell.global_batch
+    token = sds((b, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    cache = cache_specs_struct(cfg, cell)
+    return token, pos, cache
+
+
+def batch_pspec(batch, *, multi_pod: bool, dp: int):
+    """PartitionSpec tree for a batch dict: leading (batch) dim over DP
+    when divisible."""
+    axes = ("pod", "data") if multi_pod else ("data",)
+
+    def fn(leaf):
+        if leaf.shape and leaf.shape[0] % dp == 0 and leaf.shape[0] > 1:
+            return P(axes, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree.map(fn, batch)
+
+
+def applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — DESIGN §6 skip table."""
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k-token KV decode is "
+                       "quadratic-cost/OOM; skipped per spec, see DESIGN §6")
+    if cell.name == "long_500k" and cfg.family == "encdec":
+        return False, "enc-dec decoder caps at short contexts (DESIGN §6)"
+    return True, ""

@@ -1,0 +1,245 @@
+"""Attention layers: GQA/MQA, qk-norm, QKV bias, RoPE/M-RoPE, sliding
+window, cross-attention, KV-cache decode.
+
+Two execution paths, both memory-hierarchy-aware (the paper's tiling
+insight):
+  * XLA path — online-softmax over KV chunks via lax.scan; the S matrix
+    never exceeds (q, chunk). Differentiable; what the dry-run lowers.
+  * Pallas path — kernels/flash_attention.py, the TPU target; swapped
+    in through kernels.ops (validated in interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain, current_mesh
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+
+def _constrain_bthd(x, cfg):
+    """Shard a (B, T, H, D) attention tensor: heads over "model" when
+    divisible, else (opt-in) the sequence dim — context parallelism for
+    head counts like 40 that don't divide the 16-wide model axis."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    tp = mesh.shape["model"]
+    fallback = None if cfg.constrain_mode == "replicate" else "free"
+    if x.shape[2] % tp == 0:
+        return constrain(x, "dp", None, "tp", None)
+    if cfg.shard_attn_seq and x.shape[1] % tp == 0:
+        return constrain(x, "dp", "tp", fallback, None)
+    return constrain(x, "dp", None, fallback, None)
+
+
+# ----------------------------------------------------------------------
+# Chunked online-softmax attention (pure jnp, differentiable)
+# ----------------------------------------------------------------------
+
+def chunked_attention(
+    q: jnp.ndarray,               # [B, Tq, H, D]
+    k: jnp.ndarray,               # [B, Tk, Hkv, D]
+    v: jnp.ndarray,               # [B, Tk, Hkv, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 2048,
+    q_offset=0,                   # int or traced scalar (decode)
+    kv_len=None,                  # optional valid-length mask (decode)
+    io_dtype=jnp.float32,         # bf16 = flash-kernel numerics (§Perf)
+) -> jnp.ndarray:
+    b, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    g = h // hkv
+    scale = d ** -0.5
+    chunk = min(chunk, tk)
+    assert tk % chunk == 0, (tk, chunk)
+    n_chunks = tk // chunk
+
+    qf = (q.astype(io_dtype) * jnp.asarray(scale, io_dtype)) \
+        .reshape(b, tq, hkv, g, d)
+    kc = k.astype(io_dtype).reshape(b, n_chunks, chunk, hkv, d)
+    vc = v.astype(io_dtype).reshape(b, n_chunks, chunk, hkv, d)
+
+    q_pos = jnp.arange(tq)[:, None] + q_offset          # [Tq, 1]
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kci, vci, c_idx = inp
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qf, kci,
+                       preferred_element_type=jnp.float32)
+        k_pos = c_idx * chunk + jnp.arange(chunk)[None, :]
+        mask = jnp.ones((tq, chunk), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        if kv_len is not None:
+            mask &= k_pos < kv_len
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        s_max = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, s_max)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, tq, hkv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, tq, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, tq, hkv, g, d), jnp.float32)
+    if n_chunks == 1:
+        (m, l, acc), _ = step((m0, l0, a0),
+                              (kc[:, 0], vc[:, 0], jnp.int32(0)))
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+             jnp.arange(n_chunks, dtype=jnp.int32)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(b, tq, h, d)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, *, causal, window, chunk, q_offset=0, kv_len=None,
+           backend: str = "xla", io_dtype=jnp.float32):
+    """Backend mux. The Pallas kernel requires static offset / full kv.
+
+    The XLA path is wrapped in a named_scope so the roofline analyzer
+    can identify attention-interior traffic — on the TPU target this
+    whole region is the Pallas flash kernel (kernels/flash_attention.py,
+    same math, validated in interpret mode) whose intermediates never
+    touch HBM. §Perf models that substitution from the tag.
+    """
+    if backend != "xla" and kv_len is None and isinstance(q_offset, int):
+        return kops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            backend=backend)
+    with jax.named_scope("flashsite"):
+        return chunked_attention(
+            q, k, v, causal=causal, window=window, chunk=chunk,
+            q_offset=q_offset, kv_len=kv_len, io_dtype=io_dtype)
+
+
+# ----------------------------------------------------------------------
+# Attention layer (self + cross)
+# ----------------------------------------------------------------------
+
+def attn_init(key, cfg, *, d_model=None, cross: bool = False):
+    d = d_model or cfg.d_model
+    dh = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, h * dh, dtype=dtype, bias=cfg.qkv_bias),
+        "wk": L.dense_init(ks[1], d, hkv * dh, dtype=dtype, bias=cfg.qkv_bias),
+        "wv": L.dense_init(ks[2], d, hkv * dh, dtype=dtype, bias=cfg.qkv_bias),
+        "wo": L.dense_init(ks[3], h * dh, d, dtype=dtype,
+                           scale=(h * dh) ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh, dtype=dtype)
+        p["k_norm"] = L.rmsnorm_init(dh, dtype=dtype)
+    return p
+
+
+def project_cross_kv(p, enc_out, cfg):
+    """Project encoder output to (k, v) for cross-attention (Whisper)."""
+    return _project_kv(p, enc_out, cfg)
+
+
+def _project_kv(p, x, cfg):
+    b, t, _ = x.shape
+    dh = cfg.resolved_head_dim
+    k = L.dense_apply(p["wk"], x).reshape(b, t, cfg.n_kv_heads, dh)
+    v = L.dense_apply(p["wv"], x).reshape(b, t, cfg.n_kv_heads, dh)
+    k = constrain(k, "dp", None, "tp", None)   # kv heads stay head-sharded
+    v = constrain(v, "dp", None, "tp", None)   # (or replicated if MQA-ish)
+    if cfg.qk_norm:
+        k = L.rmsnorm_apply(p["k_norm"], k)
+    return k, v
+
+
+def attn_apply(
+    p,
+    x: jnp.ndarray,               # [B, T, D]
+    cfg,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    use_rope: Optional[bool] = None,
+    cache: Optional[dict] = None,  # {"k","v"} [B, Tmax, Hkv, Dh] (+pos)
+    cache_pos=None,                # scalar write offset
+    enc_kv: Optional[tuple] = None,  # cross-attn: precomputed (k, v)
+    backend: str = "xla",
+):
+    """Returns (out, new_cache). new_cache is None unless cache given."""
+    b, t, _ = x.shape
+    dh = cfg.resolved_head_dim
+    use_rope = cfg.use_rope if use_rope is None else use_rope
+
+    q = L.dense_apply(p["wq"], x).reshape(b, t, cfg.n_heads, dh)
+    q = _constrain_bthd(q, cfg)
+    if cfg.qk_norm:
+        q = L.rmsnorm_apply(p["q_norm"], q)
+
+    io_dtype = jnp.float32 if cfg.attn_f32_io else jnp.bfloat16
+
+    if enc_kv is not None:                      # cross attention
+        k, v = enc_kv
+        out = attend(q, k, v, causal=False, window=None,
+                     chunk=cfg.attn_chunk, backend=backend,
+                     io_dtype=io_dtype)
+        out = out.reshape(b, t, cfg.n_heads * dh)
+        return L.dense_apply(p["wo"], out), None
+
+    k, v = _project_kv(p, x, cfg)
+
+    if positions is None:
+        off = cache_pos if cache_pos is not None else 0
+        positions = L.default_positions(b, t, off)
+    if use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                 k.astype(cache["k"].dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                 v.astype(cache["v"].dtype),
+                                                 cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        if cfg.window is not None and t == 1 and cache["k"].shape[1] > 2 * cfg.window:
+            # SWA decode fast-path: only the last `window` cache entries
+            # can attend — slice them out instead of scanning 500k keys.
+            start = jnp.maximum(cache_pos + 1 - cfg.window, 0)
+            kw = jax.lax.dynamic_slice_in_dim(ck, start, cfg.window, axis=1)
+            vw = jax.lax.dynamic_slice_in_dim(cv, start, cfg.window, axis=1)
+            out = attend(q, kw, vw, causal=False, window=None,
+                         chunk=cfg.attn_chunk,
+                         kv_len=jnp.minimum(cache_pos + 1 - start,
+                                            cfg.window),
+                         backend="xla", io_dtype=io_dtype)
+        else:
+            out = attend(q, ck, cv, causal=True, window=cfg.window,
+                         chunk=cfg.attn_chunk, q_offset=cache_pos,
+                         kv_len=cache_pos + t, backend="xla",
+                         io_dtype=io_dtype)
+    else:
+        out = attend(q, k, v, causal=causal, window=cfg.window,
+                     chunk=cfg.attn_chunk, backend=backend,
+                     io_dtype=io_dtype)
+
+    out = out.reshape(b, t, cfg.n_heads * dh)
+    return L.dense_apply(p["wo"], out), new_cache

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU / GELU MLPs. All GEMMs route through the
+core.gemm chokepoint (the paper's kernel under every FFN)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def mlp_init(key, cfg, *, d_model=None, d_ff=None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    down_scale = f ** -0.5 / (2 * cfg.n_layers) ** 0.5
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": L.dense_init(ks[0], d, f, dtype=dtype),
+            "w_up": L.dense_init(ks[1], d, f, dtype=dtype),
+            "w_down": L.dense_init(ks[2], f, d, dtype=dtype, scale=down_scale),
+        }
+    return {
+        "w_in": L.dense_init(ks[0], d, f, dtype=dtype, bias=True),
+        "w_out": L.dense_init(ks[1], f, d, dtype=dtype, bias=True,
+                              scale=down_scale),
+    }
+
+
+def mlp_apply(p, x, cfg):
+    if cfg.mlp == "swiglu":
+        g = L.dense_apply(p["w_gate"], x)
+        u = L.dense_apply(p["w_up"], x)
+        return L.dense_apply(p["w_down"], jax.nn.silu(g) * u)
+    h = jax.nn.gelu(L.dense_apply(p["w_in"], x))
+    return L.dense_apply(p["w_out"], h)

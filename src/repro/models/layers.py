@@ -1,0 +1,121 @@
+"""Shared building blocks: norms, embeddings, rotary (incl. M-RoPE).
+
+Module style: pure init/apply function pairs over plain-dict pytrees —
+no framework dependency, stable param paths for the sharding rules and
+the checkpointer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gemm
+
+
+def dense_init(key, d_in: int, d_out: int, *, dtype, scale: float | None = None,
+               bias: bool = False):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense_apply(p, x, *, out_dtype=None):
+    return gemm.dense(x, p["w"].astype(x.dtype), p.get("b"), out_dtype=out_dtype)
+
+
+def rmsnorm_init(d: int, *, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, *, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, *, dtype):
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * (d ** -0.5)
+    return {"w": w.astype(dtype)}
+
+
+def embed_apply(p, ids, *, dtype):
+    return jnp.take(p["w"], ids, axis=0).astype(dtype)
+
+
+def embed_attend(p, x):
+    """Tied-embedding logits: x @ W^T through the GEMM chokepoint."""
+    return gemm.matmul(x, p["w"].astype(x.dtype).T, out_dtype=jnp.float32)
+
+
+def sinusoid_positions(t: int, d: int, offset: int = 0) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (f32)."""
+    pos = jnp.arange(offset, offset + t)[:, None].astype(jnp.float32)
+    div = jnp.exp(-jnp.log(10_000.0) * jnp.arange(0, d, 2) / d)
+    pe = jnp.zeros((t, d), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ----------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections=None) -> jnp.ndarray:
+    """x: [B, T, H, D]; positions: [B, T] or [B, T, 3] (M-RoPE).
+
+    M-RoPE (Qwen2-VL): the head_dim/2 frequency slots are partitioned
+    into (temporal, height, width) sections, each rotated by its own
+    position stream. Text tokens carry t=h=w so M-RoPE degenerates to
+    RoPE exactly — property-tested in tests/test_layers.py.
+    """
+    b, t, h, d = x.shape
+    freqs = rope_freqs(d, theta)                        # [d/2]
+    if positions.ndim == 2:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [B,T,d/2]
+    else:
+        assert mrope_sections is not None
+        ang_parts = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            ang_parts.append(
+                positions[..., i, None].astype(jnp.float32)
+                * freqs[start:start + sec])
+            start += sec
+        assert start == d // 2, (mrope_sections, d)
+        ang = jnp.concatenate(ang_parts, axis=-1)       # [B,T,d/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_positions(b: int, t: int, offset=0) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None] + offset,
+                            (b, t))

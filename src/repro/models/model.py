@@ -1,0 +1,268 @@
+"""Top-level model API, uniform across all 10 assigned architectures.
+
+    params = init_params(cfg, key)
+    loss, metrics = loss_fn(cfg, params, batch)            # train
+    cache = init_cache(cfg, batch_size, max_len)
+    logits, cache = prefill(cfg, params, batch, cache)     # inference
+    logits, cache = decode_step(cfg, params, token, pos, cache)
+
+Batch keys by family:
+  decoder/moe : tokens, labels
+  vlm         : tokens, patch_embeds (aligned, zeros at text pos),
+                positions (B,S,3 M-RoPE), labels
+  ssm/hybrid  : tokens, labels
+  encdec      : enc_frames (stub conv-frontend output), tokens, labels
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                              dtype=dtype),
+        "final_norm": T._norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[1], cfg.d_model, cfg.padded_vocab,
+                                    dtype=dtype)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        p["layers"] = T.stack_init(ks[2], cfg)
+    elif fam == "ssm":
+        p["layers"] = T.ssm_stack_init(ks[2], cfg)
+    elif fam == "hybrid":
+        p["hybrid"] = T.hybrid_init(ks[2], cfg)
+    elif fam == "encdec":
+        enc_cfg = dataclasses.replace(cfg, n_layers=cfg.n_enc_layers)
+        p["enc_layers"] = T.stack_init(ks[3], enc_cfg)
+        p["enc_final_norm"] = T._norm_init(cfg)
+        p["dec_layers"] = T.stack_init(ks[4], cfg, cross=True)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ----------------------------------------------------------------------
+# forward (full-sequence) per family
+# ----------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_apply(params["embed"], batch["tokens"], dtype=dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # Vision stub: precomputed patch embeddings arrive aligned with
+        # the token grid (zeros at text positions) and are added in.
+        x = x + batch["patch_embeds"].astype(dtype)
+    return constrain(x, "dp", None, None)
+
+
+def _logits(cfg, params, x):
+    x = T._norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.embed_attend(params["embed"], x)
+    else:
+        logits = L.dense_apply(params["lm_head"], x, out_dtype=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        # Megatron-style vocab padding: mask pad classes out of softmax.
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return constrain(logits, "dp", None, "tp")
+
+
+def _run_encoder(cfg, params, frames):
+    enc_cfg = dataclasses.replace(cfg, n_layers=cfg.n_enc_layers)
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + L.sinusoid_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    x, _, _ = T.stack_apply(params["enc_layers"], x, enc_cfg, causal=False)
+    return T._norm_apply(cfg, params["enc_final_norm"], x)
+
+
+def forward(cfg, params, batch) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence logits (training / evaluation). Returns (logits, aux)."""
+    fam = cfg.family
+    aux: dict = {}
+    if fam in ("dense", "moe", "vlm"):
+        x = _embed_inputs(cfg, params, batch)
+        x, _, aux = T.stack_apply(params["layers"], x, cfg,
+                                  positions=batch.get("positions"))
+    elif fam == "ssm":
+        x = _embed_inputs(cfg, params, batch)
+        x, _ = T.ssm_stack_apply(params["layers"], x, cfg)
+    elif fam == "hybrid":
+        x = _embed_inputs(cfg, params, batch)
+        x, _, _ = T.hybrid_apply(params["hybrid"], x, cfg, emb0=x)
+    elif fam == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["enc_frames"])
+        x = _embed_inputs(cfg, params, batch)
+        x = x + L.sinusoid_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+        x, _, aux = T.stack_apply(params["dec_layers"], x, cfg,
+                                  enc_out=enc_out)
+    else:
+        raise ValueError(fam)
+    return _logits(cfg, params, x), aux
+
+
+def loss_fn(cfg, params, batch):
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll * valid) / denom
+    metrics = {"ce_loss": loss, "tokens": denom}
+    for k, v in aux.items():
+        metrics[k] = v
+        if k.endswith("_loss"):
+            loss = loss + v
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ----------------------------------------------------------------------
+# KV / state caches
+# ----------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int = 0):
+    dtype = jnp.dtype(cfg.dtype)
+    dh = cfg.resolved_head_dim
+    fam = cfg.family
+
+    def kv(layers, length, heads):
+        shape = (layers, batch, length, heads, dh)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    if fam in ("dense", "moe", "vlm"):
+        return kv(cfg.n_layers, max_len, cfg.n_kv_heads)
+    if fam == "ssm":
+        st = S.mamba_init_state(cfg, batch, dtype=dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), st)
+    if fam == "hybrid":
+        n_seg = cfg.n_layers // cfg.attn_every
+        st = S.mamba_init_state(cfg, batch, dtype=dtype)
+        mamba = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (n_seg, cfg.attn_every) + a.shape).copy(), st)
+        return {"mamba": mamba, "attn": kv(n_seg, max_len, cfg.n_kv_heads)}
+    if fam == "encdec":
+        return {"self": kv(cfg.n_layers, max_len, cfg.n_kv_heads),
+                "cross": kv(cfg.n_layers, enc_len or cfg.enc_ctx,
+                            cfg.n_kv_heads)}
+    raise ValueError(fam)
+
+
+# ----------------------------------------------------------------------
+# prefill / decode
+# ----------------------------------------------------------------------
+
+def prefill(cfg, params, batch, cache, pos: int = 0):
+    """Run the prompt through the model, filling `cache`. Returns
+    (last-position logits, cache)."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        x = _embed_inputs(cfg, params, batch)
+        x, cache, _ = T.stack_apply(params["layers"], x, cfg,
+                                    positions=batch.get("positions"),
+                                    caches=cache, cache_pos=pos)
+    elif fam == "ssm":
+        x = _embed_inputs(cfg, params, batch)
+        x, cache = T.ssm_stack_apply(params["layers"], x, cfg, states=cache)
+    elif fam == "hybrid":
+        x = _embed_inputs(cfg, params, batch)
+        x, attn_c, mamba_c = T.hybrid_apply(
+            params["hybrid"], x, cfg, emb0=x,
+            attn_caches=cache["attn"], cache_pos=pos,
+            mamba_states=cache["mamba"])
+        cache = {"mamba": mamba_c, "attn": attn_c}
+    elif fam == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["enc_frames"])
+        cross = jax.vmap(
+            lambda lp: A.project_cross_kv(lp["cross_attn"], enc_out, cfg)
+        )(params["dec_layers"])
+        cross = {"k": cross[0], "v": cross[1]}
+        x = _embed_inputs(cfg, params, batch)
+        x = x + L.sinusoid_positions(
+            x.shape[1], cfg.d_model, pos)[None].astype(x.dtype)
+        x, self_c, _ = T.stack_apply(
+            params["dec_layers"], x, cfg, caches=cache["self"],
+            cache_pos=pos, cross_caches=cross)
+        cache = {"self": self_c, "cross": cross}
+    else:
+        raise ValueError(fam)
+    return _logits(cfg, params, x[:, -1:]), cache
+
+
+def decode_step(cfg, params, token, pos, cache):
+    """One-token step. token: (B, 1) int32; pos: scalar int32."""
+    fam = cfg.family
+    batch = {"tokens": token}
+    if fam in ("dense", "moe", "vlm"):
+        if fam == "vlm":
+            # text token in decode: t = h = w = pos (M-RoPE degenerate)
+            b = token.shape[0]
+            batch["positions"] = jnp.broadcast_to(
+                jnp.asarray(pos, jnp.int32), (b, 1, 3)) \
+                if cfg.mrope_sections else None
+        x = _embed_inputs(cfg, params, batch)
+        x, cache, _ = T.stack_apply(params["layers"], x, cfg,
+                                    positions=batch.get("positions"),
+                                    caches=cache, cache_pos=pos)
+    elif fam == "ssm":
+        x = _embed_inputs(cfg, params, batch)
+        x, cache = T.ssm_stack_apply(params["layers"], x, cfg,
+                                     states=cache, decode=True)
+    elif fam == "hybrid":
+        x = _embed_inputs(cfg, params, batch)
+        x, attn_c, mamba_c = T.hybrid_apply(
+            params["hybrid"], x, cfg, emb0=x,
+            attn_caches=cache["attn"], cache_pos=pos,
+            mamba_states=cache["mamba"], decode=True)
+        cache = {"mamba": mamba_c, "attn": attn_c}
+    elif fam == "encdec":
+        x = _embed_inputs(cfg, params, batch)
+        b = token.shape[0]
+        pe = L.sinusoid_positions(1, cfg.d_model)[None]
+        # offset the sinusoid by pos dynamically
+        pe = _sinusoid_at(cfg.d_model, pos)[None, None, :]
+        x = x + pe.astype(x.dtype)
+        x, self_c, _ = T.stack_apply(
+            params["dec_layers"], x, cfg, caches=cache["self"],
+            cache_pos=pos, cross_caches=cache["cross"])
+        cache = {"self": self_c, "cross": cache["cross"]}
+    else:
+        raise ValueError(fam)
+    return _logits(cfg, params, x), cache
+
+
+def _sinusoid_at(d: int, pos) -> jnp.ndarray:
+    div = jnp.exp(-jnp.log(10_000.0) * jnp.arange(0, d, 2) / d)
+    ang = jnp.asarray(pos, jnp.float32) * div
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,185 @@
+"""Mixture-of-Experts with GShard-style capacity dispatch.
+
+Chosen for scale-out behaviour: the dispatch/combine are einsums over a
+one-hot (group, token, expert, slot) tensor, so under pjit the expert
+dimension shards over the "model" axis (expert parallelism) and XLA
+emits the all-to-alls — no torch-style manual routing. The expert GEMMs
+are batched matmuls through the core.gemm chokepoint: the paper's tiled
+kernel runs *inside* every expert.
+
+Covers Mixtral (8e top-2) and Arctic (128e top-2 + parallel dense
+residual branch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gemm
+from repro.distributed.context import constrain
+from repro.models import ffn as F
+from repro.models import layers as L
+
+
+def moe_init(key, cfg):
+    mc = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, mc.n_experts
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+
+    def expert_bank(k, d_in, d_out, scale):
+        w = jax.random.normal(k, (e, d_in, d_out), jnp.float32) * scale
+        return w.astype(dtype)
+
+    down_scale = f ** -0.5 / (2 * cfg.n_layers) ** 0.5
+    p = {
+        "router": L.dense_init(ks[0], d, e, dtype=jnp.float32),
+        "w_gate": expert_bank(ks[1], d, f, d ** -0.5),
+        "w_up": expert_bank(ks[2], d, f, d ** -0.5),
+        "w_down": expert_bank(ks[3], f, d, down_scale),
+    }
+    if mc.dense_ff:
+        p["dense"] = F.mlp_init(ks[4], cfg, d_ff=mc.dense_ff)
+    return p
+
+
+def _capacity(mc, s: int) -> int:
+    c = int(mc.top_k * s * mc.capacity_factor / mc.n_experts)
+    return max(4, c)
+
+
+def _route(p, xg, mc):
+    """Router: returns (probs, renormalised top-k probs, top-k ids,
+    per-(g,s,e) capacity position, keep mask)."""
+    e, k = mc.n_experts, mc.top_k
+    g, s, _ = xg.shape
+    c = _capacity(mc, s)
+    logits = L.dense_apply(p["router"], xg.astype(jnp.float32))  # [G,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                       # [G,S,k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)       # renorm
+
+    counts = jnp.zeros((g, e), jnp.int32)
+    pos_k, keep_k = [], []
+    for kk in range(k):
+        mask = jax.nn.one_hot(top_i[..., kk], e, dtype=jnp.int32)  # [G,S,E]
+        pos = counts[:, None, :] + jnp.cumsum(mask, axis=1) - mask
+        keep = (pos < c) & (mask > 0)
+        pos_k.append(jnp.take_along_axis(
+            pos, top_i[..., kk, None], axis=-1)[..., 0])           # [G,S]
+        keep_k.append(jnp.take_along_axis(
+            keep, top_i[..., kk, None], axis=-1)[..., 0])
+        counts = counts + jnp.sum(mask, axis=1)
+    return (logits, probs, top_p, top_i,
+            jnp.stack(pos_k, -1), jnp.stack(keep_k, -1), c)
+
+
+def _dispatch_gather(xg, top_i, top_p, pos, keep, e, c):
+    """Index-based dispatch/combine: O(tokens*topk) bytes moved, no
+    (G,S,E,C) one-hot tensors — the beyond-baseline schedule."""
+    g, s, d = xg.shape
+    k = top_i.shape[-1]
+    gi = jnp.arange(g)[:, None]
+    src = jnp.broadcast_to(jnp.arange(s)[None, :], (g, s))
+
+    # slot -> source-token index; sentinel S reads the zero pad row
+    idx = jnp.full((g, e, c), s, jnp.int32)
+    for kk in range(k):
+        pos_cl = jnp.where(keep[..., kk], pos[..., kk], c)  # OOB -> drop
+        idx = idx.at[gi, top_i[..., kk], pos_cl].set(
+            jnp.where(keep[..., kk], src, s), mode="drop")
+
+    x_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    ex_in = x_pad[gi[..., None], idx]                  # [G,E,C,D]
+    return ex_in, idx
+
+
+def _combine_gather(ex_out_g, top_i, top_p, pos, keep, dtype):
+    """ex_out_g: [G,E,C,D] -> per-token weighted sum over the k slots."""
+    g, e, c, d = ex_out_g.shape
+    k = top_i.shape[-1]
+    s = top_i.shape[1]
+    gi = jnp.arange(g)[:, None]
+    out = jnp.zeros((g, s, d), jnp.float32)
+    for kk in range(k):
+        pos_cl = jnp.clip(pos[..., kk], 0, c - 1)
+        slot = ex_out_g[gi, top_i[..., kk], pos_cl].astype(jnp.float32)
+        wk = jnp.where(keep[..., kk], top_p[..., kk], 0.0)
+        out = out + slot * wk[..., None]
+    return out.astype(dtype)
+
+
+def moe_apply(p, x, cfg):
+    """x: [B, T, D]. Returns (out, aux) where aux carries router losses."""
+    mc = cfg.moe
+    b, t, d = x.shape
+    e, k = mc.n_experts, mc.top_k
+    # largest group size <= mc.group_size that divides the token count
+    s = min(mc.group_size, b * t)
+    while (b * t) % s:
+        s -= 1
+    g = (b * t) // s
+
+    xg = x.reshape(g, s, d)
+    xg = constrain(xg, "dp", None, None)
+    logits, probs, top_p, top_i, pos, keep, c = _route(p, xg, mc)
+
+    if mc.dispatch == "gather":
+        ex_in, _ = _dispatch_gather(xg, top_i, top_p, pos, keep, e, c)
+        ex_in = ex_in.transpose(1, 0, 2, 3).reshape(e, g * c, d)
+    else:
+        # GShard one-hot einsum dispatch (baseline; O(tokens*E*C) bytes)
+        dispatch = jnp.zeros((g, s, e, c), dtype=x.dtype)
+        for kk in range(k):
+            slot = (jax.nn.one_hot(top_i[..., kk], e, dtype=x.dtype)[..., None]
+                    * jax.nn.one_hot(pos[..., kk], c, dtype=x.dtype)[..., None, :]
+                    * keep[..., kk, None, None].astype(x.dtype))
+            dispatch = dispatch + slot
+        ex_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg).reshape(e, g * c, d)
+    # the G->E resharding below is the expert-parallel all-to-all
+    ex_in = constrain(ex_in, "tp", "dp", None)
+
+    gate = gemm.matmul(ex_in, p["w_gate"].astype(ex_in.dtype))
+    up = gemm.matmul(ex_in, p["w_up"].astype(ex_in.dtype))
+    h = jax.nn.silu(gate) * up
+    ex_out = gemm.matmul(h, p["w_down"].astype(h.dtype))
+    ex_out = constrain(ex_out.reshape(e, g, c, d), "tp", "dp", None, None)
+
+    if mc.dispatch == "gather":
+        out = _combine_gather(ex_out.transpose(1, 0, 2, 3),
+                              top_i, top_p, pos, keep, x.dtype)
+    else:
+        combine = jnp.zeros((g, s, e, c), dtype=x.dtype)
+        for kk in range(k):
+            slot = (jax.nn.one_hot(top_i[..., kk], e, dtype=x.dtype)[..., None]
+                    * jax.nn.one_hot(pos[..., kk], c, dtype=x.dtype)[..., None, :]
+                    * keep[..., kk, None, None].astype(x.dtype))
+            combine = combine + slot * top_p[..., kk, None, None].astype(x.dtype)
+        # bf16 operands + f32 accumulation: halves the dispatch/combine
+        # collective bytes vs f32 upcast (§Perf mixtral it5)
+        out = jnp.einsum("egcd,gsec->gsd", ex_out, combine,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(b, t, d)
+
+    if mc.dense_ff:   # Arctic: parallel dense residual branch
+        out = out + F.mlp_apply(
+            p["dense"], x,
+            dataclasses.replace(cfg, d_ff=mc.dense_ff))
+
+    # Aux losses (Switch/GShard): load balance + router z-loss; plus the
+    # dropped-token fraction as a monitored invariant.
+    me = jnp.mean(probs, axis=(0, 1))                            # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {
+        "moe_lb_loss": lb_loss * mc.load_balance_coef,
+        "moe_z_loss": z_loss * mc.router_z_coef,
+        "moe_dropped_frac": dropped,
+    }
+    return out, aux

@@ -1,0 +1,134 @@
+"""Roofline terms per (arch x shape x mesh) from a compiled dry-run.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = ICI_bytes_per_device / link_bw
+
+HLO_FLOPs / bytes / collective bytes come from roofline.hlo (the
+while-loop-aware static analyzer; compiled.cost_analysis() undercounts
+scanned stacks — verified, see EXPERIMENTS §Dry-run). MODEL_FLOPS is
+the 6·N·D / 2·N·D convention (N = active params for MoE), so the
+MODEL_FLOPS/HLO_FLOPs ratio exposes remat and redundant compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import jax
+
+from repro.core import hw
+from repro.roofline import hlo as H
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts via eval_shape (no allocation)."""
+    from repro.models import model as M
+
+    shapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    total = 0
+    expert_total = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if "moe/w_" in pstr:
+            expert_total += n
+    active = total
+    if cfg.moe is not None and expert_total:
+        frac = cfg.moe.top_k / cfg.moe.n_experts
+        active = total - expert_total + int(expert_total * frac)
+    return total, active
+
+
+def model_flops(cfg, cell, *, kind: str) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (one decode step),
+    N = active params (MoE), D = tokens processed. Attention flops
+    excluded by convention (noted in EXPERIMENTS)."""
+    _, active = count_params(cfg)
+    if kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * cell.global_batch         # decode: one token/seq
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    n_devices: int
+    hlo_flops_per_device: float
+    hbm_bytes_per_device: float
+    ici_bytes_per_device: float
+    collectives: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bound: str
+    model_flops_total: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * devices)
+    mfu_roofline: float          # useful-compute-time / dominant term
+    memory_analysis: dict
+    note: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def summary_line(self) -> str:
+        return (f"{self.arch:16s} {self.shape:12s} {self.mesh:10s} "
+                f"tc={self.t_compute*1e3:9.3f}ms tm={self.t_memory*1e3:9.3f}ms "
+                f"tcoll={self.t_collective*1e3:9.3f}ms bound={self.bound:10s} "
+                f"useful={self.useful_ratio:6.3f} mfu*={self.mfu_roofline:6.3f}")
+
+
+def build_report(
+    cfg, cell, *, kind: str, mesh_name: str, n_devices: int,
+    hlo_text: str, memory_analysis=None, chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    note: str = "",
+) -> RooflineReport:
+    costs = H.analyze(hlo_text, n_devices)
+    peak = chip.peak_flops_bf16
+    t_c = costs.flops / peak
+    t_m = costs.hbm_bytes / chip.hbm_bw
+    t_coll = costs.ici_bytes / chip.ici_link_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell, kind=kind)
+    useful = mf / max(costs.flops * n_devices, 1.0)
+    t_useful = mf / n_devices / peak
+    mfu = t_useful / max(max(terms.values()), 1e-30)
+
+    ma = {}
+    if memory_analysis is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes"):
+            ma[k] = getattr(memory_analysis, k, None)
+
+    return RooflineReport(
+        arch=cfg.name, shape=cell.name, mesh=mesh_name, kind=kind,
+        n_devices=n_devices,
+        hlo_flops_per_device=costs.flops,
+        hbm_bytes_per_device=costs.hbm_bytes,
+        ici_bytes_per_device=costs.ici_bytes,
+        collectives=costs.collective_summary(),
+        t_compute=t_c, t_memory=t_m, t_collective=t_coll, bound=bound,
+        model_flops_total=mf, useful_ratio=useful, mfu_roofline=mfu,
+        memory_analysis=ma, note=note,
+    )
+
+
+def save_report(report: RooflineReport, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=2)

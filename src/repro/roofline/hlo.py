@@ -1,0 +1,414 @@
+"""Static analyzer over optimized HLO text.
+
+Why not compiled.cost_analysis()? XLA's HloCostAnalysis visits a while
+body ONCE — a 56-layer scanned transformer reports 1/56th of its flops
+(verified; see EXPERIMENTS.md §Dry-run notes). Since scan-over-layers
+is non-negotiable at 512 devices, this module re-derives costs from
+`compiled.as_text()` with while-loop trip counts applied:
+
+  flops        — 2 * prod(result_dims) * prod(contracting_dims) per
+                 dot / custom-call matmul; elementwise ignored (<1%).
+  hbm bytes    — per top-level instruction: operand + output bytes
+                 (the same model XLA uses on fused modules).
+  collectives  — per op kind: result bytes, replica-group size, and the
+                 ring-model ICI bytes; counted with loop multipliers.
+
+It is deliberately conservative and fully transparent — the §Perf
+iterations read these numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_RHS_RE = re.compile(
+    r"^(\([^()]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[":{ ]*n["}: ]*"?(\d+)')
+
+
+def _parse_shape(text: str):
+    """-> list of (dtype, dims) for every shape literal in `text`."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims_t = tuple(int(x) for x in dims.split(",") if x) if dims else ()
+        out.append((dt, dims_t))
+    return out
+
+
+def _shape_bytes(shapes) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(dims or (1,))
+               for dt, dims in shapes)
+
+
+def _shape_elems(shapes) -> int:
+    return sum(math.prod(dims or (1,)) for dt, dims in shapes)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_shapes: list
+    rest: str                  # operand list + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    bytes_result: int
+    group_size: int
+    count: int                 # loop-scaled invocation count
+    where: str
+
+    @property
+    def ici_bytes(self) -> float:
+        """Ring-model bytes crossing ICI per device, per invocation."""
+        p, n = self.group_size, self.bytes_result
+        if p <= 1:
+            return 0.0
+        if self.op.startswith("all-reduce"):
+            return 2 * n * (p - 1) / p
+        if self.op.startswith("all-gather"):
+            return n * (p - 1) / p
+        if self.op.startswith("reduce-scatter"):
+            return n * (p - 1)          # operand = result * p
+        if self.op.startswith("all-to-all"):
+            return n * (p - 1) / p
+        if self.op.startswith("collective-permute"):
+            return n
+        return n
+
+
+def _group_size(rest: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]*)\}", rest)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    m = re.search(r"replica_groups=\{\}", rest)
+    if m:
+        return total_devices
+    return total_devices
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(line)
+            if m and "{" in line:
+                cur = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _ASSIGN_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        m2 = _RHS_RE.match(rhs)
+        if not m2:
+            continue
+        shape_txt, op, rest = m2.groups()
+        cur.instrs.append(Instr(name, op, _parse_shape(shape_txt), rest))
+    return comps
+
+
+_ZERO_COST = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # loop-carry copies are aliased/elided on TPU; charging them models
+    # the CPU backend, not the target (documented choice).
+    "copy", "copy-start", "copy-done",
+}
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: List[Collective] = dataclasses.field(default_factory=list)
+    charges: List[tuple] = dataclasses.field(default_factory=list)
+    # hbm bytes attributed to named_scope tags ("flashsite", "ssdsite")
+    tagged_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for c in other.collectives:
+            self.collectives.append(dataclasses.replace(
+                c, count=int(c.count * mult)))
+        for (b, desc) in other.charges:
+            self.charges.append((b * mult, desc))
+        for t, b in other.tagged_bytes.items():
+            self.tagged_bytes[t] = self.tagged_bytes.get(t, 0.0) + b * mult
+
+    def top_charges(self, n: int = 15):
+        return sorted(self.charges, reverse=True)[:n]
+
+    @property
+    def ici_bytes(self) -> float:
+        return sum(c.ici_bytes * c.count for c in self.collectives)
+
+    def collective_summary(self) -> dict:
+        agg = defaultdict(lambda: {"count": 0, "bytes": 0.0, "ici_bytes": 0.0})
+        for c in self.collectives:
+            base = c.op.replace("-start", "")
+            agg[base]["count"] += c.count
+            agg[base]["bytes"] += c.bytes_result * c.count
+            agg[base]["ici_bytes"] += c.ici_bytes * c.count
+        return dict(agg)
+
+
+def _dot_flops(instr: Instr, symbols: dict) -> float:
+    result_elems = _shape_elems(instr.result_shapes)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    if not m:
+        return 2.0 * result_elems      # fallback
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    # first operand name
+    om = re.match(r"\s*%?([\w.\-]+)", instr.rest)
+    contract = 1
+    if om and om.group(1) in symbols:
+        lhs_shapes = symbols[om.group(1)]
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for c in cdims:
+                if c < len(dims):
+                    contract *= dims[c]
+    return 2.0 * result_elems * contract
+
+
+_TAGS = ("flashsite", "ssdsite")
+
+
+def _tag_of(rest: str):
+    for t in _TAGS:
+        if t in rest:
+            return t
+    return None
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands are everything up to the matching ')': take names before
+    # first "), " attribute boundary — robust enough for optimized HLO.
+    depth, out, cur = 1, [], ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            cur += ch
+    for tok in cur.split(","):
+        tok = tok.strip().lstrip("%")
+        if tok and re.match(r"^[\w.\-]+$", tok):
+            out.append(tok)
+    return out
+
+
+def _fusion_in_bytes(instr: Instr, symbols: dict, callee) -> float:
+    """Operand read-bytes of a fusion, slice-aware: a fusion parameter
+    consumed by a dynamic-slice inside the callee reads only the slice
+    (e.g. the bwd loop slicing layer i's activations out of the stacked
+    (L, ...) remat buffer — charging the whole buffer per iteration
+    over-counted 64x on 64-layer stacks; see EXPERIMENTS §Dry-run)."""
+    ops_ = _operand_names(instr.rest)
+    param_by_idx = {}
+    for ci in callee.instrs:
+        if ci.op == "parameter":
+            m = re.match(r"\s*(\d+)", ci.rest)
+            if m:
+                param_by_idx[int(m.group(1))] = ci.name
+    ds_use: dict = {}
+    for ci in callee.instrs:
+        if ci.op == "dynamic-slice":
+            srcs = _operand_names(ci.rest)
+            if srcs:
+                ds_use[srcs[0]] = (ds_use.get(srcs[0], 0)
+                                   + _shape_bytes(ci.result_shapes))
+    total = 0.0
+    for idx, oname in enumerate(ops_):
+        pbytes = _shape_bytes(symbols.get(oname, []))
+        pname = param_by_idx.get(idx)
+        if pname is not None and pname in ds_use:
+            total += min(pbytes, 2 * ds_use[pname])
+        else:
+            total += pbytes
+    return total
+
+
+def analyze(text: str, total_devices: int,
+            trip_counts: Optional[Dict[str, int]] = None) -> Costs:
+    """Whole-module costs with while-loop multipliers applied."""
+    comps = parse_module(text)
+
+    # trip counts: prefer explicit backend annotation, else parse the
+    # loop-condition constant, else 1 (documented undercount).
+    def find_trip(instr: Instr) -> int:
+        m = _TRIP_RE.search(instr.rest)
+        if m:
+            return int(m.group(1))
+        mb = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+        if mb and mb.group(1) in comps:
+            cond = comps[mb.group(1)]
+            consts = []
+            for ci in cond.instrs:
+                mc = re.match(r".*constant\((\d+)\)", "%s(%s" % (ci.op, ci.rest)) \
+                    if ci.op == "constant" else None
+                if ci.op == "constant":
+                    mc = re.match(r"^\s*(\d+)\s*\)?", ci.rest)
+                    if mc:
+                        consts.append(int(mc.group(1)))
+            if consts:
+                return max(consts)
+        return 1
+
+    memo: Dict[str, Costs] = {}
+
+    def comp_cost(name: str) -> Costs:
+        if name in memo:
+            return memo[name]
+        total = Costs()
+        comp = comps.get(name)
+        if comp is None:
+            memo[name] = total
+            return total
+        symbols = {i.name: i.result_shapes for i in comp.instrs}
+        for instr in comp.instrs:
+            if instr.op in _ZERO_COST:
+                continue
+            if instr.op == "while":
+                trips = find_trip(instr)
+                mbody = re.search(r"body=%?([\w.\-]+)", instr.rest)
+                if mbody:
+                    total.add(comp_cost(mbody.group(1)), trips)
+                continue
+            if instr.op in ("call", "async-start"):
+                mcal = re.search(r"(?:to_apply|called_computation)=%?([\w.\-]+)",
+                                 instr.rest)
+                if mcal:
+                    total.add(comp_cost(mcal.group(1)))
+                continue
+            if instr.op == "conditional":
+                for mbr in re.finditer(
+                        r"(?:true_computation|false_computation|branch_computations=\{)[%\w.,\- ]*",
+                        instr.rest):
+                    pass  # conservative: take max branch below
+                branches = re.findall(r"%([\w.\-]+)", instr.rest)
+                sub = [comp_cost(b) for b in branches if b in comps]
+                if sub:
+                    best = max(sub, key=lambda c: c.flops + c.hbm_bytes)
+                    total.add(best)
+                continue
+            base_op = instr.op.replace("-start", "")
+            if base_op in ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute"):
+                if instr.op.endswith("-done"):
+                    continue
+                total.collectives.append(Collective(
+                    op=instr.op,
+                    bytes_result=_shape_bytes(instr.result_shapes),
+                    group_size=_group_size(instr.rest, total_devices),
+                    count=1,
+                    where=name,
+                ))
+                total.hbm_bytes += 2 * _shape_bytes(instr.result_shapes)
+                continue
+            if instr.op in ("dot", "custom-call"):
+                if instr.op == "dot" or "matmul" in instr.rest:
+                    total.flops += _dot_flops(instr, symbols)
+
+            out_bytes = _shape_bytes(instr.result_shapes)
+            tag = _tag_of(instr.rest)
+
+            def _charge(nbytes):
+                total.hbm_bytes += nbytes
+                total.charges.append((nbytes, f"{name}/{instr.op}/{instr.name}"))
+                if tag:
+                    total.tagged_bytes[tag] = \
+                        total.tagged_bytes.get(tag, 0.0) + nbytes
+
+            if instr.op in ("dynamic-slice", "gather"):
+                # reads only the slice it produces (+ tiny indices)
+                _charge(2 * out_bytes)
+                continue
+            if instr.op == "dynamic-update-slice":
+                ops_ = _operand_names(instr.rest)
+                upd = _shape_bytes(symbols.get(ops_[1], [])) if len(ops_) > 1 \
+                    else out_bytes
+                _charge(2 * upd)                # in-place on TPU
+                continue
+            if instr.op == "fusion":
+                mcal = re.search(r"calls=%?([\w.\-]+)", instr.rest)
+                callee = comps.get(mcal.group(1)) if mcal else None
+                if mcal:
+                    # dots inside fusions still cost flops
+                    total.flops += comp_cost(mcal.group(1)).flops
+                if callee is not None and callee.instrs and \
+                        callee.instrs[-1].op == "dynamic-update-slice":
+                    # in-place DUS fusion: charge the update slice, not
+                    # the whole aliased buffer.
+                    root = callee.instrs[-1]
+                    csym = {i.name: i.result_shapes for i in callee.instrs}
+                    ops_ = _operand_names(root.rest)
+                    upd = (_shape_bytes(csym.get(ops_[1], []))
+                           if len(ops_) > 1 else 0)
+                    in_bytes = sum(
+                        _shape_bytes(symbols.get(o, []))
+                        for o in _operand_names(instr.rest)
+                        if _shape_bytes(symbols.get(o, [])) != out_bytes)
+                    _charge(upd * 2 + min(in_bytes, _fusion_in_bytes(
+                        instr, symbols, callee)))
+                    continue
+                if callee is not None:
+                    _charge(out_bytes + _fusion_in_bytes(instr, symbols,
+                                                         callee))
+                    continue
+            in_bytes = sum(_shape_bytes(symbols.get(o, []))
+                           for o in _operand_names(instr.rest))
+            _charge(out_bytes + in_bytes)
+        memo[name] = total
+        return total
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: computation with the most instructions
+        entry = max(comps, key=lambda n: len(comps[n].instrs))
+    return comp_cost(entry)

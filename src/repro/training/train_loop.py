@@ -1,0 +1,103 @@
+"""train_step / serve_step factories.
+
+train_step(params, opt_state, ef_state, batch) — value_and_grad over
+the model loss with:
+  * gradient accumulation: the global batch is split into `accum`
+    microbatches scanned sequentially (activation memory / batch-size
+    decoupling — how train_4k x batch-256 fits);
+  * optional int8 error-feedback gradient compression before the
+    (pjit-inserted) data-parallel reduction;
+  * AdamW with global-norm clipping, cosine schedule;
+  * donated params/opt_state (in launch/train.py's jit wrapper).
+
+serve_step(params, token, pos, cache) — one decode token; prefill()
+builds the cache. Both are what launch/dryrun.py lowers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as comp
+from repro.models import model as M
+from repro.optim.adamw import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Optional[comp.EFState]
+
+
+def init_state(cfg, optimizer: AdamW, key, *, compress: bool = False):
+    params = M.init_params(cfg, key)
+    return TrainState(
+        params=params,
+        opt=optimizer.init(params),
+        ef=comp.init_ef(params) if compress else None,
+    )
+
+
+def _split_microbatches(batch, accum: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape((accum, b // accum) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg, optimizer: AdamW, *, accum: int = 1,
+                    compress: bool = False):
+    def loss_fn(params, mb):
+        return M.loss_fn(cfg, params, mb)
+
+    def train_step(state: TrainState, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, met), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), met
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), mets = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = jax.tree.map(lambda m: m[-1], mets)
+            metrics["ce_loss"] = loss
+
+        ef = state.ef
+        if compress and ef is not None:
+            grads, ef = comp.compress_grads(grads, ef)
+
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["loss"] = loss
+        return TrainState(params, opt, ef), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, token, pos, cache):
+        return M.decode_step(cfg, params, token, pos, cache)
+    return serve_step
+
+
+def make_prefill(cfg):
+    def prefill_fn(params, batch, cache):
+        return M.prefill(cfg, params, batch, cache)
+    return prefill_fn

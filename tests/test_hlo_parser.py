@@ -1,0 +1,77 @@
+"""HLO analyzer parser edge cases (beyond the end-to-end checks in
+test_roofline)."""
+
+from repro.roofline import hlo as H
+
+
+def test_tuple_result_and_comment_parsing():
+    text = """
+HloModule t
+
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8]{1,0} parameter(0)
+  %w = (s32[], f32[8,8]{1,0}, /*index=2*/f32[4,4]{1,0}) tuple(%p)
+  ROOT %r = f32[8,8]{1,0} add(%p, %p)
+}
+"""
+    comps = H.parse_module(text)
+    assert "main" in comps
+    ops = {i.op for i in comps["main"].instrs}
+    assert "tuple" in ops and "add" in ops
+    # tuple shapes parsed (3 shapes incl comment-separated)
+    tup = [i for i in comps["main"].instrs if i.op == "tuple"][0]
+    assert len(tup.result_shapes) == 3
+
+
+def test_group_size_formats():
+    assert H._group_size("replica_groups=[4,2]<=[8]", 8) == 2
+    assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 8) == 4
+    assert H._group_size("replica_groups={}", 8) == 8
+    assert H._group_size("no groups here", 16) == 16
+
+
+def test_collective_ici_models():
+    mk = lambda op, n, p: H.Collective(op, n, p, 1, "x")
+    n = 1024
+    assert mk("all-reduce", n, 4).ici_bytes == 2 * n * 3 / 4
+    assert mk("all-gather", n, 4).ici_bytes == n * 3 / 4
+    assert mk("reduce-scatter", n, 4).ici_bytes == n * 3
+    assert mk("collective-permute", n, 4).ici_bytes == n
+    assert mk("all-reduce", n, 1).ici_bytes == 0.0
+
+
+def test_dtype_bytes_table():
+    assert H._shape_bytes([("bf16", (4, 4))]) == 32
+    assert H._shape_bytes([("f32", ()), ("s8", (8,))]) == 12
+    assert H._shape_bytes([("c64", (2,))]) == 16
+
+
+def test_nested_while_multiplier():
+    text = """
+HloModule t
+
+%inner_body (t: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %t = (s32[], f32[128,128]{1,0}) parameter(0)
+  %g = f32[128,128]{1,0} get-tuple-element(%t), index=1
+  %i = s32[] get-tuple-element(%t), index=0
+  %d = f32[128,128]{1,0} dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %o = (s32[], f32[128,128]{1,0}) tuple(%i, %d)
+}
+
+%inner_cond (t: (s32[], f32[128,128])) -> pred[] {
+  %t = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (x: f32[128,128]) -> f32[128,128] {
+  %x = f32[128,128]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[128,128]{1,0}) tuple(%z, %x)
+  %w = (s32[], f32[128,128]{1,0}) while(%tup), condition=%inner_cond, body=%inner_body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r = f32[128,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    costs = H.analyze(text, 1)
+    assert costs.flops == 5 * 2 * 128 ** 3

