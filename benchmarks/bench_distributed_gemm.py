@@ -23,9 +23,9 @@ import sys, time
 sys.path.insert(0, "src")
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.distributed import sharded_matmul
+from repro.launch.mesh import axis_kw
 
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("model",), **axis_kw(1))
 rng = np.random.default_rng(0)
 m = k = n = 1024
 a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)

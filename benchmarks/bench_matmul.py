@@ -6,17 +6,37 @@ kernel). Modeled: per-chip roofline times for the paper's accelerators
 (C1060, C2050 naive/shared) and the v5e target, reported next to the
 paper's own Table-2 seconds so the reproduction is checkable
 column-by-column.
+
+`run(autotune=True)` (the harness's --autotune flag) additionally
+sweeps tile configs for the measured shapes via repro.tuning and
+persists winners; every run reports whether the `tuned` backend is
+being served from that cache.
 """
 
 from __future__ import annotations
+
+if __package__ in (None, ""):  # `python benchmarks/bench_matmul.py`
+    import os
+    import sys
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_jax
+from repro import tuning
 from repro.core import blocking, gemm, hw, precision
 from repro.configs.paper_gemm import CONFIG as PAPER
+
+# Shapes the interpret-mode autotune sweep covers on this container.
+# On a real TPU the same flag sweeps the compiled kernel instead
+# (tuning.default_exec_backend picks the backend).
+TUNE_SIZES = (256, 512)
+TUNE_FLASH = (256, 512, 64)   # (tq, tk, head_dim)
 
 
 def modeled_time(chip, n, itemsize, shared: bool) -> float:
@@ -25,7 +45,50 @@ def modeled_time(chip, n, itemsize, shared: bool) -> float:
     return blocking.gemm_time_model(n, n, n, itemsize, cfg, chip=chip)["t_total"]
 
 
-def run() -> None:
+def _autotune_sweep(backend: str) -> None:
+    """Populate the tuning cache for the shapes this suite measures and
+    report tuned-vs-default tile timings."""
+    for n in TUNE_SIZES:
+        res = tuning.tune_matmul(n, n, n, "float32", backend=backend,
+                                 warmup=1, iters=2, max_candidates=6)
+        b = res.best
+        emit(f"autotune_matmul_{backend}_{n}", res.best_s,
+             f"best=bm{b.bm}xbn{b.bn}xbk{b.bk};"
+             f"default_us={res.baseline_s*1e6:.1f};"
+             f"speedup_vs_default={res.speedup:.2f}x;"
+             f"trials={len(res.trials)}")
+    tq, tk, d = TUNE_FLASH
+    res = tuning.tune_flash_attention(tq, tk, d, "float32", backend=backend,
+                                      warmup=1, iters=2, max_candidates=4)
+    emit(f"autotune_flash_{backend}_{tq}x{tk}", res.best_s,
+         f"best=bq{res.best.bq}xbk{res.best.bk};"
+         f"speedup_vs_default={res.speedup:.2f}x;trials={len(res.trials)}")
+    cache = tuning.get_cache()
+    print(f"# autotune: {len(cache)} entries cached at {cache.path} "
+          f"(fingerprint {cache.fingerprint})")
+
+
+def _tuned_serving_report(backend: str) -> None:
+    """Measure the `tuned` backend and say whether each shape's tiles
+    came from the autotuner cache or fell back to the static chooser."""
+    cache = tuning.get_cache(refresh=True)
+    rng = np.random.default_rng(1)
+    tuned_backend = "tuned_interpret" if backend.endswith("interpret") \
+        else "tuned"
+    for n in TUNE_SIZES:
+        cfg = cache.get_matmul(n, n, n, "float32", backend)
+        a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        f = lambda x, y: gemm.matmul(x, y, backend=tuned_backend)
+        t = time_jax(f, a, a, warmup=1, iters=2)
+        if cfg is not None:
+            derived = (f"served_from_cache=True;"
+                       f"config=bm{cfg.bm}xbn{cfg.bn}xbk{cfg.bk}")
+        else:
+            derived = "served_from_cache=False;fallback=static-chooser"
+        emit(f"matmul_{tuned_backend}_{n}", t, derived)
+
+
+def run(autotune: bool = False) -> None:
     n = PAPER.n                                    # 4096, the paper's size
     rng = np.random.default_rng(0)
 
@@ -49,6 +112,12 @@ def run() -> None:
         t = time_jax(f, a, a, warmup=1, iters=2)
         emit(f"matmul_{backend}_{ni}", t,
              "interpreter-not-wallclock-meaningful")
+
+    # --- tile autotuning (sweep + cache) and tuned-backend serving
+    exec_backend = tuning.default_exec_backend()
+    if autotune:
+        _autotune_sweep(exec_backend)
+    _tuned_serving_report(exec_backend)
 
     # --- modeled Table 2 (per-chip roofline), float column
     paper = PAPER.reference_times
@@ -75,4 +144,8 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep tile configs and persist winners")
+    run(autotune=ap.parse_args().autotune)

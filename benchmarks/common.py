@@ -1,23 +1,13 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission.
+
+`time_jax` lives in repro.tuning.timing so the autotuner and the
+benchmark tables score candidates with the same clock; this module
+keeps the historical import site working.
+"""
 
 from __future__ import annotations
 
-import time
-
-import jax
-
-
-def time_jax(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-clock seconds per call of a jax function."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+from repro.tuning.timing import time_jax  # noqa: F401  (re-export)
 
 
 def emit(name: str, seconds: float, derived: str = "") -> str:

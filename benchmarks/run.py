@@ -1,11 +1,26 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--autotune]
+    python benchmarks/run.py --autotune        # script form also works
 
 Output contract: ``name,us_per_call,derived`` CSV lines.
+
+--autotune runs the tile-autotuning sweep (repro.tuning) for the suites
+that support it and persists winners to the tuning cache
+($REPRO_TUNING_CACHE, default ~/.cache/repro/tuning.json); without
+--only it restricts to those suites so cache population stays fast.
+Subsequent runs report the `tuned` backend being served from the cache.
 """
 
 from __future__ import annotations
+
+if __package__ in (None, ""):  # `python benchmarks/run.py`
+    import os
+    import sys as _sys
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in _sys.path:
+            _sys.path.insert(0, _p)
 
 import argparse
 import sys
@@ -24,10 +39,16 @@ SUITES = {
     "roofline_table": bench_roofline_table.run,  # deliverable (g)
 }
 
+# Suites whose run() accepts autotune= and sweeps the tuner.
+AUTOTUNABLE = frozenset({"matmul"})
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep tile configs via repro.tuning and persist "
+                         "winners to the tuning cache")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -35,9 +56,14 @@ def main() -> None:
     for name, fn in SUITES.items():
         if args.only and name != args.only:
             continue
+        if args.autotune and not args.only and name not in AUTOTUNABLE:
+            continue
         print(f"# --- {name} ---")
         try:
-            fn()
+            if args.autotune and name in AUTOTUNABLE:
+                fn(autotune=True)
+            else:
+                fn()
         except Exception:
             failures.append(name)
             traceback.print_exc()

@@ -44,6 +44,35 @@ class BlockConfig:
         return flops / bytes_moved
 
 
+@dataclasses.dataclass(frozen=True)
+class FlashBlockConfig:
+    """Tile sizes for the flash-attention kernel: (bq, d) query tiles
+    resident in VMEM, (bk, d) key/value tiles streamed through."""
+    bq: int
+    bk: int
+
+    def vmem_bytes(self, d: int, itemsize: int,
+                   double_buffer: bool = True) -> int:
+        mult = 2 if double_buffer else 1
+        tiles = (self.bq * d + 2 * self.bk * d) * itemsize * mult
+        # f32 scratch: output accumulator + running max + denominator.
+        acc = (self.bq * d + 2 * self.bq * 128) * 4
+        return tiles + acc
+
+
+def choose_flash_config(
+    tq: int,
+    tk: int,
+    d: int,
+    itemsize: int = 2,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+) -> FlashBlockConfig:
+    """Default (bq, bk) for flash attention — the kernel's historical
+    constants, clamped to the sequence lengths. The autotuner
+    (repro.tuning) sweeps alternatives and caches per-shape winners."""
+    return FlashBlockConfig(bq=min(256, tq), bk=min(512, tk))
+
+
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 

@@ -57,7 +57,10 @@ def ring_matmul(x, w, *, axis: str, backend: str | None = None):
     pass it to the next ring neighbour. P-1 permutes hide behind P local
     GEMMs of shape (M_local, K/p, N).
     """
-    p = jax.lax.axis_size(axis)
+    # jax >= 0.5 has lax.axis_size; the psum-of-1 idiom is the portable
+    # spelling (constant-folded to a static int for named axes).
+    p = (jax.lax.axis_size(axis) if hasattr(jax.lax, "axis_size")
+         else jax.lax.psum(1, axis))
     idx = jax.lax.axis_index(axis)
     kb = w.shape[0]          # local K block
     n = w.shape[1]
@@ -73,7 +76,8 @@ def ring_matmul(x, w, *, axis: str, backend: str | None = None):
         return acc, w_t
 
     acc0 = jnp.zeros(x.shape[:-1] + (n,), dtype=x.dtype)
-    acc0 = jax.lax.pvary(acc0, (axis,))  # match the loop body's vma type
+    if hasattr(jax.lax, "pvary"):  # jax >= 0.5 varying-manual-axes type
+        acc0 = jax.lax.pvary(acc0, (axis,))  # match the loop body's vma
     acc, _ = jax.lax.fori_loop(0, p, body, (acc0, w))
     return acc
 

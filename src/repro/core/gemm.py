@@ -4,7 +4,9 @@ Every dense contraction in the model zoo — QKV/O projections, FFN, MoE
 expert GEMMs, logits, SSD chunk matmuls — routes through `matmul()` /
 `dense()` here, so switching the global backend swaps the paper's tiled
 kernel in and out of the *whole framework* (the reproduce-vs-optimise
-axis of EXPERIMENTS.md).
+axis of EXPERIMENTS.md). The "tuned" backend additionally swaps the
+static tile chooser for per-shape winners from the autotuner cache
+(repro.tuning; launchers warm it via tuning.warm_start).
 
 Responsibilities on top of kernels.ops:
   * batched / n-d shapes (leading dims folded into M);
@@ -54,7 +56,7 @@ def _matmul_2d(a, b, backend, out_dtype):
             return _ops.matmul(a, b, backend="xla", out_dtype=out_dtype)
         real = lambda x, y: _ops.matmul(x, y, backend=backend)
         return _prec.complex_matmul(a, b, real, algorithm="gauss3")
-    if a.dtype == jnp.float64 and backend in ("pallas", "naive"):
+    if a.dtype == jnp.float64 and backend in ("pallas", "naive", "tuned"):
         # no MXU f64 path: compiled-TPU f64 falls back to XLA emulation.
         backend = "xla"
     return _ops.matmul(a, b, backend=backend, out_dtype=out_dtype)

@@ -85,3 +85,21 @@ TESLA_C1060 = ChipSpec(
 )
 
 DEFAULT_CHIP = TPU_V5E
+
+
+def fingerprint(chip: ChipSpec | None = None) -> str:
+    """Hardware identity string keying the tuning cache (repro.tuning).
+
+    Tile timings only transfer between identical stacks, so the key
+    combines the modeled chip, the physical device actually executing
+    (platform + kind — interpret-mode timings on CPU must never be
+    served to a real TPU), and the jax version (Mosaic codegen changes
+    shift optima). Cache entries recorded under a different fingerprint
+    are ignored and the static chooser in core.blocking is used instead.
+    """
+    import jax  # local: keep this module importable without jax
+
+    chip = chip or DEFAULT_CHIP
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", "unknown").replace(" ", "-")
+    return f"{chip.name}|{dev.platform}|{kind}|jax-{jax.__version__}"

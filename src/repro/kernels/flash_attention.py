@@ -105,8 +105,13 @@ def flash_attention(
     q_offset: int = 0,
     bq: int = 256,
     bk: int = 512,
+    block=None,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    # `block` (core.blocking.FlashBlockConfig — e.g. an autotuner-cache
+    # winner) overrides the bq/bk defaults.
+    if block is not None:
+        bq, bk = block.bq, block.bk
     bh, tq, d = q.shape
     bhkv, tk, dk = k.shape
     assert d == dk and v.shape == k.shape

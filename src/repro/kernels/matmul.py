@@ -55,12 +55,16 @@ def matmul_tiled(
     bm: int = 256,
     bn: int = 256,
     bk: int = 512,
+    block=None,
     out_dtype=None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """C[M,N] = A[M,K] @ B[K,N], real dtypes only (complex is decomposed
     in core.gemm). Shapes must be multiples of the block dims — ops.py
-    pads otherwise."""
+    pads otherwise. `block` (a core.blocking.BlockConfig, e.g. from the
+    autotuner cache) overrides the bm/bn/bk defaults when given."""
+    if block is not None:
+        bm, bn, bk = block.bm, block.bn, block.bk
     m, ka = a.shape
     kb, n = b.shape
     assert ka == kb, (a.shape, b.shape)

@@ -11,6 +11,11 @@ Backends:
   pallas_interpret  same kernel, interpreter — CPU validation
   naive             hierarchy-blind Pallas kernel (Listing 3)
   naive_interpret   its interpreter twin
+  tuned             tiled kernel with tile sizes served from the
+                    autotuner cache (repro.tuning); falls back to the
+                    static core.blocking chooser on a cache miss or
+                    hardware-fingerprint mismatch
+  tuned_interpret   its interpreter twin (cache keyed separately)
 """
 
 from __future__ import annotations
@@ -26,10 +31,19 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import matmul as _mm
 from repro.kernels import matmul_naive as _mmn
 from repro.kernels import ref as _ref
+from repro.tuning import cache as _tcache
 
 MATMUL_BACKENDS = (
     "xla", "pallas", "pallas_interpret", "naive", "naive_interpret",
+    "tuned", "tuned_interpret",
 )
+
+
+def resolve_tuned(backend: str) -> str:
+    """tuned(_interpret) executes the tiled kernel; cache entries are
+    keyed by the execution backend so interpreter timings never leak
+    into compiled-TPU decisions."""
+    return "pallas_interpret" if backend.endswith("interpret") else "pallas"
 
 
 def _pad2(x: jnp.ndarray, m_to: int, n_to: int) -> jnp.ndarray:
@@ -61,6 +75,13 @@ def matmul(
 
     if backend == "xla":
         return _ref.matmul_ref(a, b, out_dtype=out_dtype)
+
+    if backend.startswith("tuned"):
+        backend = resolve_tuned(backend)
+        if block is None:
+            block = _tcache.get_cache().get_matmul(m, n, k, a.dtype, backend)
+            # miss / fingerprint mismatch -> block stays None and the
+            # static chooser below picks the paper's default tiles.
 
     interpret = backend.endswith("interpret")
     itemsize = jnp.dtype(a.dtype).itemsize
@@ -108,6 +129,7 @@ def flash_attention(
     backend: str = "xla",
     bq: int = 256,
     bk: int = 512,
+    block: blocking.FlashBlockConfig | None = None,
 ) -> jnp.ndarray:
     """Layout-normalising wrapper: model code uses [B, T, H, D]."""
     if backend == "xla":
@@ -115,6 +137,12 @@ def flash_attention(
             q, k, v, causal=causal, window=window, q_offset=q_offset)
     b_, tq, h, d = q.shape
     _, tk, hkv, _ = k.shape
+    if backend.startswith("tuned"):
+        backend = resolve_tuned(backend)
+        if block is None:
+            block = _tcache.get_cache().get_flash(tq, tk, d, q.dtype, backend)
+    if block is not None:
+        bq, bk = block.bq, block.bk
     g = h // hkv
     qf = q.transpose(0, 2, 1, 3).reshape(b_ * h, tq, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b_ * hkv, tk, d)

@@ -19,7 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import tuning
 from repro.configs import ARCH_NAMES, get_config
+from repro.core import gemm
+from repro.kernels import ops as kops
 from repro.models import model as M
 from repro.training import train_loop as TL
 
@@ -32,9 +35,25 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=kops.MATMUL_BACKENDS, default="xla",
+                    help="GEMM backend for every dense contraction "
+                         "(tuned = autotuner-cached tiles)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune uncached GEMM shapes at startup")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    gemm.set_default_backend(args.backend)
+    if args.backend.startswith("tuned") or args.autotune:
+        # Warm the cache under the SAME exec backend the runtime lookup
+        # resolves to, for the shapes it actually sees: prefill GEMMs
+        # have batch*prompt_len rows, decode GEMMs batch*1 rows.
+        rep = tuning.warm_start(
+            cfg, args.batch, (args.prompt_len, 1),
+            backend=kops.resolve_tuned(args.backend)
+            if args.backend.startswith("tuned") else None,
+            autotune=args.autotune)
+        print(tuning.describe_warm_start(rep))
     rng = np.random.default_rng(args.seed)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
 

@@ -194,8 +194,11 @@ def _dot_flops(instr: Instr, symbols: dict) -> float:
     if not m:
         return 2.0 * result_elems      # fallback
     cdims = [int(x) for x in m.group(1).split(",") if x]
-    # first operand name
-    om = re.match(r"\s*%?([\w.\-]+)", instr.rest)
+    # first operand name; XLA prints operands typed ("f32[64,128]{1,0}
+    # %lhs") or bare ("%lhs") depending on version — skip the shape.
+    om = re.match(
+        r"\s*(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?\s*)?%?([\w.\-]+)",
+        instr.rest)
     contract = 1
     if om and om.group(1) in symbols:
         lhs_shapes = symbols[om.group(1)]

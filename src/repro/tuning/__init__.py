@@ -1,0 +1,34 @@
+"""Benchmark-driven tile autotuning for the Pallas kernels.
+
+The paper's speedup is a function of block size; this package makes
+block size a measured quantity instead of a constant. See
+docs/ARCHITECTURE.md §Autotuning for the subsystem map and
+EXPERIMENTS.md §Autotune for the cache format.
+
+Layering: cache/space/timing are leaves (kernels.ops may import them);
+autotuner sits above kernels.ops and is loaded lazily here so that
+`kernels.ops -> tuning.cache` never cycles back through this package.
+"""
+
+from repro.tuning.cache import (CACHE_ENV_VAR, TuningCache,
+                                default_cache_path, flash_key, get_cache,
+                                matmul_key, reset_cache, set_cache)
+from repro.tuning.space import flash_candidates, matmul_candidates
+from repro.tuning.timing import time_jax
+
+_LAZY = ("TuneResult", "default_exec_backend", "describe_warm_start",
+         "model_gemm_shapes", "tune_flash_attention", "tune_matmul",
+         "warm_start")
+
+__all__ = [
+    "CACHE_ENV_VAR", "TuningCache", "default_cache_path", "flash_key",
+    "get_cache", "matmul_key", "reset_cache", "set_cache",
+    "flash_candidates", "matmul_candidates", "time_jax", *_LAZY,
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.tuning import autotuner
+        return getattr(autotuner, name)
+    raise AttributeError(name)

@@ -1,0 +1,273 @@
+"""Benchmark-driven tile search.
+
+The paper fixes one block size per experiment and shows blocking wins;
+this module closes the loop: for a concrete (M, N, K, dtype, backend)
+it times every feasible tile config (tuning.space) with the shared
+timing harness (tuning.timing, also behind benchmarks/), and persists
+the winner to the fingerprint-keyed cache (tuning.cache) that the
+`tuned` backend in kernels/ops.py consults.
+
+Entry points:
+  tune_matmul / tune_flash_attention  — sweep one shape, cache winner
+  warm_start                          — launcher hook: load the cache
+      for a model config's hot GEMM shapes, optionally tuning misses
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.core.blocking import BlockConfig, FlashBlockConfig
+from repro.kernels import ops as _ops
+from repro.tuning import space as _space
+from repro.tuning.cache import TuningCache, get_cache
+from repro.tuning.timing import time_jax
+
+
+def default_exec_backend() -> str:
+    """The Pallas execution backend timings are valid for on this host:
+    compiled on a real TPU, interpreter otherwise. Interpret-mode
+    timings exercise the full mechanism but are not TPU wall-clock —
+    the fingerprint keeps the two populations apart."""
+    return "pallas" if jax.devices()[0].platform == "tpu" else "pallas_interpret"
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    op: str                      # "matmul" | "flash"
+    key: str                     # cache key the winner was stored under
+    backend: str
+    best: object                 # BlockConfig | FlashBlockConfig
+    best_s: float
+    baseline: object             # the static chooser's config
+    baseline_s: float
+    trials: tuple                # ((config, seconds), ...) in sweep order
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_s / self.best_s if self.best_s > 0 else 1.0
+
+
+def _timer(fn, args, interpret: bool, warmup: int, iters: int):
+    # jit with the operands as real arguments — closing over them would
+    # embed them as compile-time constants (one bloated recompile per
+    # candidate, and XLA could fold parts of the graph it should time).
+    if not interpret:
+        fn = jax.jit(fn)
+    return time_jax(fn, *args, warmup=warmup, iters=iters)
+
+
+def _timing_meta(best_s: float, baseline_s: float) -> dict:
+    """Advisory timing metadata, kept strictly JSON-finite: the static
+    baseline config may itself have failed (inf) on this backend."""
+    meta = {"time_us": round(best_s * 1e6, 2)}
+    if math.isfinite(baseline_s) and best_s > 0:
+        meta["baseline_us"] = round(baseline_s * 1e6, 2)
+        meta["speedup"] = round(baseline_s / best_s, 4)
+    return meta
+
+
+def tune_matmul(
+    m: int,
+    n: int,
+    k: int,
+    dtype="float32",
+    *,
+    backend: str | None = None,
+    cache: TuningCache | None = None,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    warmup: int = 1,
+    iters: int = 3,
+    max_candidates: int | None = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """Sweep tile configs for one GEMM shape and cache the winner."""
+    backend = backend or default_exec_backend()
+    cache = cache or get_cache()
+    interpret = backend.endswith("interpret")
+    rng = np.random.default_rng(seed)
+    if np.dtype(dtype) == np.complex64:
+        raise ValueError("tune the underlying real GEMMs (core.gemm "
+                         "decomposes complex64 into 3 f32 GEMMs)")
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    itemsize = jnp.dtype(dtype).itemsize
+
+    trials = []
+    for cfg in _space.matmul_candidates(
+            m, n, k, itemsize, chip=chip, max_candidates=max_candidates):
+        try:
+            t = _timer(lambda x, y, c=cfg: _ops.matmul(
+                x, y, backend=backend, block=c, chip=chip),
+                (a, b), interpret, warmup, iters)
+        except Exception:  # infeasible on this backend: never the winner
+            t = float("inf")
+        trials.append((cfg, t))
+
+    baseline_cfg, baseline_s = trials[0]     # static chooser is always first
+    best_cfg, best_s = min(trials, key=lambda ct: ct[1])
+    if not math.isfinite(best_s):
+        raise RuntimeError(
+            f"all {len(trials)} tile candidates failed for "
+            f"matmul {m}x{n}x{k} {np.dtype(dtype).name} on {backend}")
+    key = cache.put_matmul(m, n, k, dtype, backend, best_cfg,
+                           **_timing_meta(best_s, baseline_s))
+    if save:
+        cache.save()
+    return TuneResult("matmul", key, backend, best_cfg, best_s,
+                      baseline_cfg, baseline_s, tuple(trials))
+
+
+def tune_flash_attention(
+    tq: int,
+    tk: int,
+    d: int,
+    dtype="float32",
+    *,
+    heads: int = 1,
+    causal: bool = True,
+    backend: str | None = None,
+    cache: TuningCache | None = None,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    warmup: int = 1,
+    iters: int = 3,
+    max_candidates: int | None = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """Sweep (bq, bk) flash-attention tiles for one shape; cache winner."""
+    backend = backend or default_exec_backend()
+    cache = cache or get_cache()
+    interpret = backend.endswith("interpret")
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, tq, heads, d)), dtype)
+    kv = jnp.asarray(rng.normal(size=(1, tk, heads, d)), dtype)
+    itemsize = jnp.dtype(dtype).itemsize
+
+    trials = []
+    for cfg in _space.flash_candidates(
+            tq, tk, d, itemsize, chip=chip, max_candidates=max_candidates):
+        try:
+            t = _timer(lambda x, y, c=cfg: _ops.flash_attention(
+                x, y, y, causal=causal, backend=backend, block=c),
+                (q, kv), interpret, warmup, iters)
+        except Exception:
+            t = float("inf")
+        trials.append((cfg, t))
+
+    baseline_cfg, baseline_s = trials[0]
+    best_cfg, best_s = min(trials, key=lambda ct: ct[1])
+    if not math.isfinite(best_s):
+        raise RuntimeError(
+            f"all {len(trials)} tile candidates failed for "
+            f"flash {tq}x{tk}xd{d} {np.dtype(dtype).name} on {backend}")
+    key = cache.put_flash(tq, tk, d, dtype, backend, best_cfg,
+                          **_timing_meta(best_s, baseline_s))
+    if save:
+        cache.save()
+    return TuneResult("flash", key, backend, best_cfg, best_s,
+                      baseline_cfg, baseline_s, tuple(trials))
+
+
+def model_gemm_shapes(cfg, batch: int, seq: int,
+                      backward: bool = False) -> list[tuple[int, int, int]]:
+    """The dense-contraction shapes a (batch, seq) step of `cfg` pushes
+    through the core.gemm chokepoint: attention projections, FFN up /
+    down, and the logits GEMM (at the PADDED vocab — the lm_head the
+    model actually allocates). Deduplicated (m, n, k) triples.
+
+    backward=True adds the custom-VJP cotangent GEMMs per forward
+    shape: da = g @ w.T is (m, k, n) and dw = x.T @ g is (k, n, m) —
+    without these, a tuned training run would only serve the forward
+    third of its GEMM flops from the cache.
+    """
+    m = batch * seq
+    head_dim = getattr(cfg, "resolved_head_dim",
+                       cfg.head_dim or cfg.d_model // cfg.n_heads)
+    vocab = getattr(cfg, "padded_vocab", cfg.vocab)
+    shapes = {
+        (m, cfg.n_heads * head_dim, cfg.d_model),          # Q proj
+        (m, cfg.n_kv_heads * head_dim, cfg.d_model),       # K/V proj
+        (m, cfg.d_model, cfg.n_heads * head_dim),          # O proj
+        (m, cfg.d_ff, cfg.d_model),                        # FFN up/gate
+        (m, cfg.d_model, cfg.d_ff),                        # FFN down
+        (m, vocab, cfg.d_model),                           # logits
+    }
+    if backward:
+        shapes |= {t for (mm, nn, kk) in tuple(shapes)
+                   for t in ((mm, kk, nn), (kk, nn, mm))}
+    return sorted(shapes)
+
+
+def warm_start(
+    cfg,
+    batch: int,
+    seq,
+    *,
+    backend: str | None = None,
+    autotune: bool = False,
+    backward: bool = False,
+    cache: TuningCache | None = None,
+    iters: int = 2,
+    max_candidates: int = 8,
+) -> dict:
+    """Launcher startup hook (launch/serve.py, launch/train.py).
+
+    Loads the tuning cache and checks it for the model's hot GEMM
+    shapes — `seq` may be an int or an iterable of sequence lengths
+    (serving warms both the prefill rows batch*prompt_len and the
+    decode rows batch*1). With autotune=False this only reports
+    coverage — misses fall back to the static chooser at run time, so
+    serving never blocks on a sweep. With autotune=True the misses are
+    tuned and persisted before the first step; a shape whose sweep
+    fails outright is reported under "failed" and left to the fallback.
+    """
+    backend = backend or default_exec_backend()
+    cache = cache or get_cache()
+    dtype = getattr(cfg, "dtype", "float32")
+    seqs = (seq,) if isinstance(seq, int) else tuple(seq)
+    shapes = sorted({s for q in seqs
+                     for s in model_gemm_shapes(cfg, batch, q,
+                                                backward=backward)})
+    hits, misses, tuned, failed = [], [], [], []
+    for (m, n, k) in shapes:
+        if cache.get_matmul(m, n, k, dtype, backend) is not None:
+            hits.append((m, n, k))
+        elif autotune:
+            try:
+                tune_matmul(m, n, k, dtype, backend=backend, cache=cache,
+                            iters=iters, max_candidates=max_candidates,
+                            save=False)
+                tuned.append((m, n, k))
+            except RuntimeError:  # every candidate failed: use fallback
+                failed.append((m, n, k))
+        else:
+            misses.append((m, n, k))
+    if tuned:
+        cache.save()
+    return {
+        "path": cache.path,
+        "fingerprint": cache.fingerprint,
+        "backend": backend,
+        "hits": hits,
+        "misses": misses,
+        "tuned": tuned,
+        "failed": failed,
+    }
+
+
+def describe_warm_start(rep: dict) -> str:
+    """One-line launcher log for a warm_start report."""
+    line = (f"tuning cache {rep['path']} [{rep['backend']}]: "
+            f"{len(rep['hits'])} hits, {len(rep['misses'])} misses, "
+            f"{len(rep['tuned'])} tuned at startup")
+    if rep.get("failed"):
+        line += f", {len(rep['failed'])} failed (static fallback)"
+    return line

@@ -1,0 +1,192 @@
+"""Persistent winner cache for the tile autotuner.
+
+One JSON file holds tuned tile configs for any number of machines,
+namespaced by hardware fingerprint (core.hw.fingerprint):
+
+    {
+      "version": 1,
+      "caches": {
+        "<fingerprint>": {
+          "matmul|4096x4096x4096|float32|pallas": {
+            "bm": 512, "bn": 512, "bk": 1024,
+            "time_us": 812.4, "baseline_us": 1103.9,
+            "speedup": 1.36, "tuned_at": "2026-07-29T12:00:00"
+          },
+          "flash|2048x2048xd64|bfloat16|pallas": {
+            "bq": 512, "bk": 512, ...
+          }
+        }
+      }
+    }
+
+Lookups under a fingerprint that is not in the file (new chip, new jax,
+interpret-vs-compiled) return None and the caller falls back to the
+static chooser in core.blocking — a stale cache can never mis-tile a
+different machine. The full format is documented in docs/ARCHITECTURE.md
+and EXPERIMENTS.md §Autotune.
+
+This module is import-light on purpose: kernels/ops.py consults it on
+every tuned-backend call, so it depends only on repro.core.
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import hw
+from repro.core.blocking import BlockConfig, FlashBlockConfig
+
+CACHE_VERSION = 1
+CACHE_ENV_VAR = "REPRO_TUNING_CACHE"
+DEFAULT_CACHE_PATH = "~/.cache/repro/tuning.json"
+
+
+def default_cache_path() -> str:
+    return os.path.expanduser(os.environ.get(CACHE_ENV_VAR, DEFAULT_CACHE_PATH))
+
+
+def matmul_key(m: int, n: int, k: int, dtype, backend: str) -> str:
+    return f"matmul|{m}x{n}x{k}|{np.dtype(dtype).name}|{backend}"
+
+
+def flash_key(tq: int, tk: int, d: int, dtype, backend: str) -> str:
+    return f"flash|{tq}x{tk}xd{d}|{np.dtype(dtype).name}|{backend}"
+
+
+class TuningCache:
+    """In-memory view of one fingerprint's entries, backed by the JSON
+    file. `save()` is read-modify-write so caches for other fingerprints
+    sharing the file survive."""
+
+    def __init__(self, path: str | None = None,
+                 fingerprint: str | None = None):
+        self.path = path or default_cache_path()
+        self.fingerprint = fingerprint or hw.fingerprint()
+        self._entries: dict[str, dict] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    # --- persistence -----------------------------------------------------
+    def load(self) -> "TuningCache":
+        with self._lock:
+            doc = self._read_file()
+            if self._newer_format(doc):
+                self._entries = {}    # unreadable to us; lookups miss
+            else:
+                self._entries = dict(
+                    doc.get("caches", {}).get(self.fingerprint, {}))
+        return self
+
+    def save(self) -> str:
+        with self._lock:
+            doc = self._read_file()
+            if self._newer_format(doc):
+                raise RuntimeError(
+                    f"{self.path} was written by a newer cache format "
+                    f"(version {doc['version']} > {CACHE_VERSION}); refusing "
+                    "to overwrite it — set REPRO_TUNING_CACHE to a fresh path")
+            doc["version"] = CACHE_VERSION
+            doc.setdefault("caches", {}).setdefault(
+                self.fingerprint, {}).update(self._entries)
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        return self.path
+
+    @staticmethod
+    def _newer_format(doc: dict) -> bool:
+        return doc.get("version", CACHE_VERSION) > CACHE_VERSION
+
+    def _read_file(self) -> dict:
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+        return doc if isinstance(doc, dict) else {}
+
+    # --- raw access ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def entries(self) -> dict[str, dict]:
+        return dict(self._entries)
+
+    def get(self, key: str) -> Optional[dict]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def put(self, key: str, entry: dict) -> None:
+        self._entries[key] = dict(entry)
+
+    # --- typed accessors -------------------------------------------------
+    def get_matmul(self, m: int, n: int, k: int, dtype,
+                   backend: str) -> Optional[BlockConfig]:
+        e = self.get(matmul_key(m, n, k, dtype, backend))
+        if e is None:
+            return None
+        return BlockConfig(bm=int(e["bm"]), bn=int(e["bn"]), bk=int(e["bk"]))
+
+    def put_matmul(self, m: int, n: int, k: int, dtype, backend: str,
+                   cfg: BlockConfig, **meta: Any) -> str:
+        key = matmul_key(m, n, k, dtype, backend)
+        self.put(key, {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk,
+                       "tuned_at": _now(), **meta})
+        return key
+
+    def get_flash(self, tq: int, tk: int, d: int, dtype,
+                  backend: str) -> Optional[FlashBlockConfig]:
+        e = self.get(flash_key(tq, tk, d, dtype, backend))
+        if e is None:
+            return None
+        return FlashBlockConfig(bq=int(e["bq"]), bk=int(e["bk"]))
+
+    def put_flash(self, tq: int, tk: int, d: int, dtype, backend: str,
+                  cfg: FlashBlockConfig, **meta: Any) -> str:
+        key = flash_key(tq, tk, d, dtype, backend)
+        self.put(key, {"bq": cfg.bq, "bk": cfg.bk, "tuned_at": _now(), **meta})
+        return key
+
+
+def _now() -> str:
+    return datetime.datetime.now().isoformat(timespec="seconds")
+
+
+# --- process-global cache (what the `tuned` backend consults) ------------
+_global: TuningCache | None = None
+_global_lock = threading.Lock()
+
+
+def get_cache(refresh: bool = False) -> TuningCache:
+    """The shared cache instance, loaded lazily from default_cache_path().
+    Re-resolved if REPRO_TUNING_CACHE changed since the last call, so
+    tests and multi-experiment drivers can repoint it."""
+    global _global
+    with _global_lock:
+        if _global is None or refresh or _global.path != default_cache_path():
+            _global = TuningCache().load()
+        return _global
+
+
+def set_cache(cache: TuningCache | None) -> None:
+    global _global
+    with _global_lock:
+        _global = cache
+
+
+def reset_cache() -> None:
+    set_cache(None)

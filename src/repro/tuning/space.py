@@ -1,0 +1,102 @@
+"""Candidate tile spaces for the autotuner.
+
+The static chooser in core.blocking picks ONE config from the paper's
+VMEM-budget argument; this module enumerates the feasible neighbourhood
+around it so the autotuner can let the hardware vote. Constraints are
+the same as the chooser's (MXU/lane alignment, double-buffered VMEM
+fit) — the sweep only reorders configs the analysis already admits.
+"""
+
+from __future__ import annotations
+
+from repro.core import blocking, hw
+from repro.core.blocking import BlockConfig, FlashBlockConfig
+
+_BM = (128, 256, 512)
+_BN = (128, 256, 512)
+_BK = (128, 256, 512, 1024, 2048)
+_BQ = (128, 256, 512)
+_FBK = (128, 256, 512, 1024)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def matmul_candidates(
+    m: int,
+    n: int,
+    k: int,
+    itemsize: int,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+    max_candidates: int | None = None,
+) -> list[BlockConfig]:
+    """Feasible (bm, bn, bk) tiles for an (m, k) x (k, n) GEMM.
+
+    The static default comes first so a tuner that times the list in
+    order always has the fallback as its baseline. Tile dims larger than
+    the (padded) problem are clamped, which collapses many grid points —
+    duplicates are dropped.
+    """
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    sub = chip.sublane(itemsize)
+    lane = chip.lane
+
+    default = blocking.choose_block_config(
+        m, n, k, itemsize, chip=chip, vmem_fraction=vmem_fraction)
+    out = [default]
+    seen = {(default.bm, default.bn, default.bk)}
+    for bm in _BM:
+        bm = min(bm, _round_up(m, sub))
+        for bn in _BN:
+            bn = min(bn, _round_up(n, lane))
+            for bk in _BK:
+                bk = min(bk, _round_up(k, lane))
+                cfg = BlockConfig(bm, bn, bk)
+                key = (bm, bn, bk)
+                if key in seen or cfg.vmem_bytes(itemsize) > budget:
+                    continue
+                seen.add(key)
+                out.append(cfg)
+    if max_candidates is not None:
+        # Keep the default plus the highest-AI survivors: AI is the
+        # paper's own proxy for which tiles can be compute-bound.
+        rest = sorted(out[1:],
+                      key=lambda c: -c.arithmetic_intensity(itemsize))
+        out = out[:1] + rest[:max(0, max_candidates - 1)]
+    return out
+
+
+def flash_candidates(
+    tq: int,
+    tk: int,
+    d: int,
+    itemsize: int,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+    max_candidates: int | None = None,
+) -> list[FlashBlockConfig]:
+    """Feasible (bq, bk) tiles for flash attention. The kernel requires
+    block sizes to divide the (padded) sequence lengths, so candidates
+    are filtered to divisors after clamping."""
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    default = blocking.choose_flash_config(tq, tk, d, itemsize, chip=chip)
+    out = [default]
+    seen = {(default.bq, default.bk)}
+    for bq in _BQ:
+        bq = min(bq, tq)
+        if tq % bq:
+            continue
+        for bk in _FBK:
+            bk = min(bk, tk)
+            if tk % bk:
+                continue
+            cfg = FlashBlockConfig(bq, bk)
+            if (bq, bk) in seen or cfg.vmem_bytes(d, itemsize) > budget:
+                continue
+            seen.add((bq, bk))
+            out.append(cfg)
+    if max_candidates is not None:
+        out = out[:max(1, max_candidates)]
+    return out

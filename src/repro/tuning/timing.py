@@ -1,0 +1,26 @@
+"""The timing harness shared by the benchmark suites and the autotuner.
+
+Canonical home of `time_jax` (benchmarks/common.py re-exports it): the
+autotuner must score candidate tile configs with exactly the clock the
+benchmark tables are built from, or tuned-vs-default speedup claims
+would compare two different measurement disciplines.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_jax(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds per call of a jax function."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -31,8 +31,8 @@ def test_sharded_matmul_schedules():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.distributed import sharded_matmul
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import axis_kw
+        mesh = jax.make_mesh((8,), ("model",), **axis_kw(1))
         rng = np.random.default_rng(0)
         a = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
@@ -100,8 +100,8 @@ def test_elastic_restore_across_mesh_sizes(tmp_path):
         from repro.checkpoint.checkpointer import Checkpointer
 
         ck = Checkpointer({str(tmp_path)!r})
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import axis_kw
+        mesh8 = jax.make_mesh((4, 2), ("data", "model"), **axis_kw(2))
         w = jnp.arange(64 * 64, dtype=jnp.float32).reshape(64, 64)
         w8 = jax.device_put(w, NamedSharding(mesh8, P("data", "model")))
         ck.save(1, {{"w": w8}})
@@ -135,8 +135,8 @@ def test_param_spec_divisibility_fallback():
     """Mixtral's 8 experts on a 16-wide model axis must fall back to
     the TP-inside-expert candidate."""
     import jax
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import axis_kw
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **axis_kw(2))
     # fake a 16-wide model axis via divisibility check paths:
     spec = SH.spec_for("layers/moe/w_gate", (56, 8, 6144, 16384), None)
     assert spec == P(None, "model", "data", None)   # no mesh: first rule
@@ -151,8 +151,8 @@ def test_batch1_cache_replicates():
     cfg = C.get_config("mamba2-2.7b")
     cell = get_shape("long_500k")
     cache = S.cache_specs_struct(cfg, cell)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import axis_kw
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **axis_kw(2))
     specs = SH.cache_specs(cache, mesh, multi_pod=False)
     for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
         pass  # structure validated by construction

@@ -29,7 +29,10 @@ def test_scan_flops_scaled_by_trip_count():
     expect = 2 * 64 * 128 * 128 * 12
     assert abs(costs.flops - expect) / expect < 0.02
     # XLA's own number undercounts by the trip count (the known gap)
-    assert c.cost_analysis()["flops"] * 6 < costs.flops
+    ca = c.cost_analysis()
+    if isinstance(ca, list):  # jax <= 0.4.x wraps it per-device
+        ca = ca[0]
+    assert ca["flops"] * 6 < costs.flops
 
 
 def test_remat_recompute_visible():
