@@ -1,0 +1,67 @@
+"""Continuous-batching serving benchmark: prefill/decode throughput and
+per-request latency percentiles under a mixed-length arrival trace.
+
+Two traces per arch on the reduced config (CPU smoke numbers; the
+engine itself is what a TPU deployment would run):
+
+  * burst  — all requests at t=0, queueing on the slot pool: measures
+    steady-state decode tok/s and slot occupancy;
+  * poisson — arrivals at a finite rate: measures the latency
+    distribution (p50/p95) a request actually sees.
+
+Output rows follow the harness contract `name,us_per_call,derived`
+with us_per_call = mean per-request latency.
+"""
+
+from __future__ import annotations
+
+if __package__ in (None, ""):  # `python benchmarks/bench_serving.py`
+    import os
+    import sys as _sys
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in _sys.path:
+            _sys.path.insert(0, _p)
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from benchmarks.common import emit
+from repro.models import model as M
+from repro.serving import ServingEngine, synthetic_trace
+
+ARCHS = ("qwen3-0.6b", "mamba2-2.7b")
+N_REQUESTS = 10
+MAX_SLOTS = 4
+GEN = 8
+LEN_RANGE = (8, 48)           # inclusive, as in launch/serve.py
+
+
+def run() -> None:
+    for name in ARCHS:
+        cfg = C.get_config(name, reduced=True)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        for label, rate in (("burst", 0.0), ("poisson", 8.0)):
+            rng = np.random.default_rng(0)
+            eng = ServingEngine(cfg, params, max_slots=MAX_SLOTS,
+                                max_len=LEN_RANGE[1] + GEN)
+            trace = synthetic_trace(cfg, N_REQUESTS, rng=rng,
+                                    len_range=LEN_RANGE, gen=GEN,
+                                    arrival_rate=rate)
+            reqs = [eng.submit(p, g, arrival_time=t, enc_frames=e)
+                    for p, g, t, e in trace]
+            rep = eng.run()
+            mean_lat = float(np.mean([r.latency for r in reqs]))
+            emit(f"serving_{name}_{label}_r{N_REQUESTS}s{MAX_SLOTS}",
+                 mean_lat,
+                 f"prefill_tok_s={rep['prefill_tok_s']:.0f};"
+                 f"decode_tok_s={rep['decode_tok_s']:.0f};"
+                 f"occupancy={rep['mean_occupancy']:.2f};"
+                 f"lat_p50_ms={rep['latency_p50_s']*1e3:.0f};"
+                 f"lat_p95_ms={rep['latency_p95_s']*1e3:.0f};"
+                 f"ttft_p50_ms={rep['ttft_p50_s']*1e3:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -27,7 +27,7 @@ import sys
 import traceback
 
 from benchmarks import (bench_add, bench_arch_step, bench_distributed_gemm,
-                        bench_matmul, bench_roofline_table,
+                        bench_matmul, bench_roofline_table, bench_serving,
                         bench_shared_memory)
 
 SUITES = {
@@ -37,6 +37,7 @@ SUITES = {
     "distributed_gemm": bench_distributed_gemm.run,  # S2050 section
     "arch_step": bench_arch_step.run,          # framework-level
     "roofline_table": bench_roofline_table.run,  # deliverable (g)
+    "serving": bench_serving.run,              # continuous-batching engine
 }
 
 # Suites whose run() accepts autotune= and sweeps the tuner.

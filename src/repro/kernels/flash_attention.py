@@ -32,9 +32,9 @@ _LANES = 128
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    q_ref, k_ref, v_ref, qo_ref, o_ref, acc_ref, m_ref, l_ref,
     *, n_kv: int, bq: int, bk: int, scale: float,
-    causal: bool, window: int | None, q_offset: int,
+    causal: bool, window: int | None,
 ):
     kv_i = pl.program_id(2)
 
@@ -44,7 +44,10 @@ def _flash_kernel(
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q_start = pl.program_id(1) * bq + q_offset
+    # q_offset streams in as data (one scalar per B*H row) so a single
+    # compiled kernel serves every decode depth — and, with a per-row
+    # vector, a continuous batch of requests at heterogeneous depths.
+    q_start = pl.program_id(1) * bq + qo_ref[0, 0]
     k_start = kv_i * bk
 
     # Block-level skip: entirely above the causal diagonal or entirely
@@ -102,7 +105,7 @@ def flash_attention(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
-    q_offset: int = 0,
+    q_offset=0,               # scalar, or (B*H,) per-row vector (decode)
     bq: int = 256,
     bk: int = 512,
     block=None,
@@ -122,9 +125,15 @@ def flash_attention(
     assert tq % bq == 0 and tk % bk == 0, (tq, tk, bq, bk)
     n_kv = tk // bk
 
+    # Per-row query offsets ride along as a (bh, 1) int32 operand; a
+    # scalar broadcasts to all rows (2-D because TPU scalars live in
+    # SMEM as (1, 1) blocks).
+    qo = jnp.broadcast_to(
+        jnp.asarray(q_offset, jnp.int32).reshape(-1, 1), (bh, 1))
+
     kernel = functools.partial(
         _flash_kernel, n_kv=n_kv, bq=bq, bk=bk, scale=scale,
-        causal=causal, window=window, q_offset=q_offset)
+        causal=causal, window=window)
 
     if _HAS_PLTPU:
         scratch = [
@@ -141,6 +150,7 @@ def flash_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         )
 
+    qo_spec_kw = {"memory_space": pltpu.SMEM} if _HAS_PLTPU else {}
     return pl.pallas_call(
         kernel,
         grid=(bh, tq // bq, n_kv),
@@ -148,10 +158,11 @@ def flash_attention(
             pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
             pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
             pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, 1), lambda h, i, j: (h, 0), **qo_spec_kw),
         ],
         out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, tq, d), q.dtype),
         scratch_shapes=scratch,
         interpret=interpret,
         **params,
-    )(q, k, v)
+    )(q, k, v, qo)

@@ -107,15 +107,21 @@ def matmul(
 
 
 def add(a, b, *, backend: str = "xla", interpret: bool | None = None):
+    """interpret=None derives interpreter mode from the backend string;
+    an explicit bool overrides it (e.g. force-interpret on CPU)."""
     if backend == "xla":
         return _ref.add_ref(a, b)
-    return _ew.binary_op(a, b, "add", interpret=backend.endswith("interpret"))
+    if interpret is None:
+        interpret = backend.endswith("interpret")
+    return _ew.binary_op(a, b, "add", interpret=interpret)
 
 
-def sub(a, b, *, backend: str = "xla"):
+def sub(a, b, *, backend: str = "xla", interpret: bool | None = None):
     if backend == "xla":
         return _ref.sub_ref(a, b)
-    return _ew.binary_op(a, b, "sub", interpret=backend.endswith("interpret"))
+    if interpret is None:
+        interpret = backend.endswith("interpret")
+    return _ew.binary_op(a, b, "sub", interpret=interpret)
 
 
 def flash_attention(
@@ -125,7 +131,7 @@ def flash_attention(
     *,
     causal: bool = True,
     window: int | None = None,
-    q_offset: int = 0,
+    q_offset=0,                # scalar, or (B,) per-row vector (decode)
     backend: str = "xla",
     bq: int = 256,
     bk: int = 512,
@@ -137,6 +143,9 @@ def flash_attention(
             q, k, v, causal=causal, window=window, q_offset=q_offset)
     b_, tq, h, d = q.shape
     _, tk, hkv, _ = k.shape
+    if jnp.asarray(q_offset).ndim == 1:
+        # per-batch offsets -> per-(batch*head) rows of the flat layout
+        q_offset = jnp.repeat(jnp.asarray(q_offset, jnp.int32), h)
     if backend.startswith("tuned"):
         backend = resolve_tuned(backend)
         if block is None:

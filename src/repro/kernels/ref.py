@@ -39,7 +39,8 @@ def attention_ref(
     causal: bool = True,
     window: int | None = None,   # sliding-window size (None = full)
     scale: float | None = None,
-    q_offset: int = 0,           # absolute position of q[0] (for decode)
+    q_offset=0,                  # absolute position of q[0] (decode):
+                                 # scalar, or (B,) per-row vector
 ) -> jnp.ndarray:
     """Dense softmax attention oracle with GQA broadcast + masks."""
     b, tq, h, d = q.shape
@@ -56,14 +57,16 @@ def attention_ref(
     vf = jnp.repeat(vf, g, axis=2)
 
     logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
-    q_pos = jnp.arange(tq)[:, None] + q_offset
-    k_pos = jnp.arange(tk)[None, :]
-    mask = jnp.ones((tq, tk), dtype=bool)
+    q_off = jnp.asarray(q_offset)
+    q_pos = jnp.arange(tq)[None, :, None] + \
+        (q_off[:, None, None] if q_off.ndim else q_off)   # (Bm, Tq, 1)
+    k_pos = jnp.arange(tk)[None, None, :]
+    mask = jnp.ones((1, tq, tk), dtype=bool)
     if causal:
         mask &= k_pos <= q_pos
     if window is not None:
         mask &= k_pos > q_pos - window
-    logits = jnp.where(mask[None, None], logits, -1e30)
+    logits = jnp.where(mask[:, None], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
     return out.astype(q.dtype)

@@ -1,22 +1,27 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""Serving CLI — a thin driver over the continuous-batching engine.
+
+Mixed-length arrival trace (the production shape):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --reduced --requests 12 --max-slots 4 --arrival-rate 2
+
+Uniform single batch (the degenerate case: all slots admitted at t=0,
+equal lengths — byte-compatible with the pre-engine driver):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --reduced --batch 4 --prompt-len 32 --gen 16
 
-Serving loop structure (the production shape of it):
-  * one jitted prefill (fills the KV/state cache, returns first token)
-  * one jitted serve_step reused for every subsequent token
-  * continuous batching hooks: the cache is (B, ...) and `pos` is
-    per-batch-uniform here; slot-level scheduling is the next layer up.
+The engine (repro.serving) owns slot scheduling, per-slot prefill and
+the shared jitted serve_step with a per-slot `pos` vector; this module
+only builds a synthetic workload, sets the GEMM backend, and reports
+per-request latency plus aggregate throughput.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import tuning
@@ -24,17 +29,64 @@ from repro.configs import ARCH_NAMES, get_config
 from repro.core import gemm
 from repro.kernels import ops as kops
 from repro.models import model as M
-from repro.training import train_loop as TL
+from repro.serving import DEFAULT_PREFILL_CHUNK, ServingEngine, \
+    make_sampler, synthetic_trace
+
+
+def build_workload(cfg, args, rng):
+    """Synthetic trace (prompt, max_new, arrival, enc): mixed-length
+    Poisson when --requests is set, else the uniform degenerate batch."""
+    if args.requests:
+        len_range = (args.prompt_len_min, args.prompt_len_max)
+        return synthetic_trace(cfg, args.requests, rng=rng,
+                               len_range=len_range, gen=args.gen,
+                               arrival_rate=args.arrival_rate)
+    return synthetic_trace(cfg, args.batch, rng=rng,
+                           len_range=(args.prompt_len, args.prompt_len),
+                           gen=args.gen, arrival_rate=0.0)
+
+
+def check_outputs(cfg, engine, requests):
+    """Hard output contract (replaces the vacuous isfinite-on-int check):
+    every emitted token is a real vocab id and the engine's aggregate
+    token count matches the per-request streams."""
+    for req in requests:
+        toks = np.asarray(req.generated)
+        assert toks.size == req.max_new_tokens or (
+            engine.eos_id is not None and toks[-1] == engine.eos_id), \
+            (req.rid, toks.size, req.max_new_tokens)
+        assert ((toks >= 0) & (toks < cfg.vocab)).all(), \
+            (req.rid, toks.min(), toks.max(), cfg.vocab)
+    n_emitted = sum(r.n_generated for r in requests)
+    assert n_emitted == engine.tokens_emitted, \
+        (n_emitted, engine.tokens_emitted)
+    assert engine.scheduler.n_active == 0 and engine.scheduler.n_waiting == 0
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true")
+    # mixed-length trace mode
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests in the synthetic trace "
+                         "(0 = uniform single-batch mode)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = burst at t=0)")
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="cache slot pool size (default: --batch, or 4)")
+    ap.add_argument("--prompt-len-min", type=int, default=8)
+    ap.add_argument("--prompt-len-max", type=int, default=48)
+    # uniform-batch mode (the degenerate case) + shared knobs
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16,
+                    help="tokens to generate per request")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sampler", choices=("greedy", "temperature"),
+                    default="greedy")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--backend", choices=kops.MATMUL_BACKENDS, default="xla",
                     help="GEMM backend for every dense contraction "
                          "(tuned = autotuner-cached tiles)")
@@ -44,57 +96,58 @@ def main(argv=None):
 
     cfg = get_config(args.arch, reduced=args.reduced)
     gemm.set_default_backend(args.backend)
-    if args.backend.startswith("tuned") or args.autotune:
-        # Warm the cache under the SAME exec backend the runtime lookup
-        # resolves to, for the shapes it actually sees: prefill GEMMs
-        # have batch*prompt_len rows, decode GEMMs batch*1 rows.
-        rep = tuning.warm_start(
-            cfg, args.batch, (args.prompt_len, 1),
-            backend=kops.resolve_tuned(args.backend)
-            if args.backend.startswith("tuned") else None,
-            autotune=args.autotune)
-        print(tuning.describe_warm_start(rep))
     rng = np.random.default_rng(args.seed)
+    work = build_workload(cfg, args, rng)
+
+    max_slots = args.max_slots or (args.batch if not args.requests else 4)
+    max_len = max(len(p) + g for p, g, _, _ in work)
+    if args.backend.startswith("tuned") or args.autotune:
+        # Warm the cache for the shapes the engine actually executes:
+        # admission prefill runs at batch 1 over chunk-bucketed prompt
+        # lengths plus one-token remainder steps (engine.prefill_chunk
+        # floors each prompt), decode at max_slots rows x 1 token.
+        chunk = DEFAULT_PREFILL_CHUNK
+        buckets = sorted({(len(p) - len(p) % chunk) or len(p)
+                          for p, _, _, _ in work} | {1})
+        backend = (kops.resolve_tuned(args.backend)
+                   if args.backend.startswith("tuned") else None)
+        rep = tuning.warm_start(cfg, 1, buckets, backend=backend,
+                                autotune=args.autotune)
+        print(tuning.describe_warm_start(rep))
+        rep = tuning.warm_start(cfg, max_slots, 1, backend=backend,
+                                autotune=args.autotune)
+        print(tuning.describe_warm_start(rep))
+
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    sampler = make_sampler(args.sampler, temperature=args.temperature,
+                           top_k=args.top_k, seed=args.seed)
+    engine = ServingEngine(cfg, params, max_slots=max_slots,
+                           max_len=max_len, sampler=sampler)
+    requests = [engine.submit(p, g, arrival_time=t, enc_frames=enc)
+                for p, g, t, enc in work]
+    report = engine.run()
 
-    b, t = args.batch, args.prompt_len
-    max_len = t + args.gen
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab, (b, t)), jnp.int32)}
-    if cfg.family == "vlm":
-        batch["patch_embeds"] = jnp.zeros((b, t, cfg.d_model),
-                                          jnp.dtype(cfg.dtype))
-        pos = np.broadcast_to(np.arange(t)[None, :, None], (b, t, 3))
-        batch["positions"] = jnp.asarray(pos, jnp.int32)
-    if cfg.family == "encdec":
-        batch["enc_frames"] = jnp.asarray(
-            rng.normal(size=(b, cfg.enc_ctx, cfg.d_model)), jnp.float32)
+    for r in requests:
+        print(f"req {r.rid:3d} prompt={r.prompt_len:3d} "
+              f"gen={r.n_generated:3d} ttft={r.ttft*1e3:7.1f}ms "
+              f"latency={r.latency*1e3:7.1f}ms")
+    print(f"arch={cfg.name} slots={max_slots} requests={len(requests)} "
+          f"prefill {report['prefill_tok_s']:.1f} tok/s, "
+          f"decode {report['decode_tok_s']:.1f} tok/s "
+          f"(occupancy {report['mean_occupancy']:.2f}/{max_slots}), "
+          f"latency p50 {report['latency_p50_s']*1e3:.0f}ms "
+          f"p95 {report['latency_p95_s']*1e3:.0f}ms, "
+          f"ttft p50 {report['ttft_p50_s']*1e3:.0f}ms")
+    check_outputs(cfg, engine, requests)
 
-    prefill = jax.jit(TL.make_prefill(cfg), donate_argnums=(2,))
-    serve_step = jax.jit(TL.make_serve_step(cfg), donate_argnums=(3,))
-
-    cache = M.init_cache(cfg, b, max_len)
-    t0 = time.time()
-    logits, cache = prefill(params, batch, cache)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    t_prefill = time.time() - t0
-
-    out_tokens = [np.asarray(tok)]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = serve_step(params, tok, jnp.int32(t + i), cache)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out_tokens.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = np.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} prefill({b}x{t}) {t_prefill*1e3:.0f}ms, "
-          f"decode {args.gen-1} steps {t_decode*1e3:.0f}ms "
-          f"({(args.gen-1)*b/max(t_decode,1e-9):.1f} tok/s)")
-    print("generated ids[0,:16]:", gen[0, :16].tolist())
-    assert np.isfinite(gen).all()
-    return gen
+    if not args.requests:
+        # degenerate mode keeps the pre-engine return contract:
+        # (batch, gen) int32 token grid, submission order
+        gen = np.stack([np.asarray(r.generated, np.int32)
+                        for r in requests])
+        print("generated ids[0,:16]:", gen[0, :16].tolist())
+        return gen
+    return report
 
 
 if __name__ == "__main__":

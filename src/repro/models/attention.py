@@ -50,8 +50,8 @@ def chunked_attention(
     causal: bool = True,
     window: Optional[int] = None,
     chunk: int = 2048,
-    q_offset=0,                   # int or traced scalar (decode)
-    kv_len=None,                  # optional valid-length mask (decode)
+    q_offset=0,                   # int / traced scalar / (B,) vector (decode)
+    kv_len=None,                  # valid-length mask: scalar or (B,) vector
     io_dtype=jnp.float32,         # bf16 = flash-kernel numerics (§Perf)
 ) -> jnp.ndarray:
     b, tq, h, d = q.shape
@@ -67,22 +67,32 @@ def chunked_attention(
     kc = k.astype(io_dtype).reshape(b, n_chunks, chunk, hkv, d)
     vc = v.astype(io_dtype).reshape(b, n_chunks, chunk, hkv, d)
 
-    q_pos = jnp.arange(tq)[:, None] + q_offset          # [Tq, 1]
+    # Position grids broadcast to (Bm, Tq, chunk) where Bm is 1 for the
+    # uniform (scalar-offset) case and B for per-slot vectors. A slot
+    # with kv_len == 0 (inactive, pos < 0) masks every key; its output
+    # is finite garbage the caller discards.
+    q_off = jnp.asarray(q_offset)
+    q_pos = jnp.arange(tq)[None, :, None] + \
+        (q_off[:, None, None] if q_off.ndim else q_off)     # [Bm, Tq, 1]
+    kl = None
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len)
+        kl = kl[:, None, None] if kl.ndim else kl
 
     def step(carry, inp):
         m, l, acc = carry
         kci, vci, c_idx = inp
         s = jnp.einsum("bqkgd,bckd->bqkgc", qf, kci,
                        preferred_element_type=jnp.float32)
-        k_pos = c_idx * chunk + jnp.arange(chunk)[None, :]
-        mask = jnp.ones((tq, chunk), dtype=bool)
+        k_pos = c_idx * chunk + jnp.arange(chunk)[None, None, :]
+        mask = jnp.ones((1, tq, chunk), dtype=bool)
         if causal:
             mask &= k_pos <= q_pos
         if window is not None:
             mask &= k_pos > q_pos - window
-        if kv_len is not None:
-            mask &= k_pos < kv_len
-        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        if kl is not None:
+            mask &= k_pos < kl
+        s = jnp.where(mask[:, :, None, None, :], s, -1e30)
         s_max = jnp.max(s, axis=-1)
         m_new = jnp.maximum(m, s_max)
         p = jnp.exp(s - m_new[..., None])
@@ -111,7 +121,8 @@ def chunked_attention(
 
 def attend(q, k, v, *, causal, window, chunk, q_offset=0, kv_len=None,
            backend: str = "xla", io_dtype=jnp.float32):
-    """Backend mux. The Pallas kernel requires static offset / full kv.
+    """Backend mux. The Pallas kernel streams q_offset (scalar or per-row
+    vector) as data but still requires the full kv to be valid.
 
     The XLA path is wrapped in a named_scope so the roofline analyzer
     can identify attention-interior traffic — on the TPU target this
@@ -119,7 +130,7 @@ def attend(q, k, v, *, causal, window, chunk, q_offset=0, kv_len=None,
     same math, validated in interpret mode) whose intermediates never
     touch HBM. §Perf models that substitution from the tag.
     """
-    if backend != "xla" and kv_len is None and isinstance(q_offset, int):
+    if backend != "xla" and kv_len is None:
         return kops.flash_attention(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
             backend=backend)
@@ -178,7 +189,9 @@ def attn_apply(
     causal: bool = True,
     use_rope: Optional[bool] = None,
     cache: Optional[dict] = None,  # {"k","v"} [B, Tmax, Hkv, Dh] (+pos)
-    cache_pos=None,                # scalar write offset
+    cache_pos=None,                # write offset: scalar, or (B,) per-slot
+                                   # vector (decode; pos < 0 = inactive slot,
+                                   # cache row left untouched)
     enc_kv: Optional[tuple] = None,  # cross-attn: precomputed (k, v)
     backend: str = "xla",
 ):
@@ -204,6 +217,8 @@ def attn_apply(
 
     k, v = _project_kv(p, x, cfg)
 
+    pos_vec = cache_pos is not None and jnp.asarray(cache_pos).ndim == 1
+
     if positions is None:
         off = cache_pos if cache_pos is not None else 0
         positions = L.default_positions(b, t, off)
@@ -212,7 +227,25 @@ def attn_apply(
         k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and pos_vec:
+        # Continuous-batching decode: each slot scatters its single k/v
+        # row at its own position — O(B) rows written, not O(cache).
+        # pos < 0 (inactive slot) maps out of bounds and mode="drop"
+        # skips the write entirely.
+        assert t == 1, "per-slot cache_pos vector requires one-token steps"
+        pos = jnp.asarray(cache_pos, jnp.int32)
+        bidx = jnp.arange(pos.shape[0])
+        widx = jnp.where(pos < 0, cache["k"].shape[1], pos)
+        ck = cache["k"].at[bidx, widx].set(
+            k[:, 0].astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[bidx, widx].set(
+            v[:, 0].astype(cache["v"].dtype), mode="drop")
+        new_cache = {"k": ck, "v": cv}
+        # Per-row masks subsume the SWA fast path (window via mask).
+        out = attend(q, ck, cv, causal=True, window=cfg.window,
+                     chunk=cfg.attn_chunk, q_offset=pos,
+                     kv_len=pos + 1, backend="xla", io_dtype=io_dtype)
+    elif cache is not None:
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
                                                  k.astype(cache["k"].dtype),
                                                  cache_pos, axis=1)

@@ -117,5 +117,8 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
 
 
 def default_positions(b: int, t: int, offset=0) -> jnp.ndarray:
-    return jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None] + offset,
-                            (b, t))
+    """offset: scalar (uniform batch) or (B,) per-slot position vector."""
+    off = jnp.asarray(offset, jnp.int32)
+    pos = jnp.arange(t, dtype=jnp.int32)[None] + \
+        (off[:, None] if off.ndim else off)
+    return jnp.broadcast_to(pos, (b, t))

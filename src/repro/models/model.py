@@ -214,7 +214,10 @@ def prefill(cfg, params, batch, cache, pos: int = 0):
 
 
 def decode_step(cfg, params, token, pos, cache):
-    """One-token step. token: (B, 1) int32; pos: scalar int32."""
+    """One-token step. token: (B, 1) int32; pos: scalar int32, or a (B,)
+    per-slot position vector (continuous batching: each batch row is an
+    independent request at its own depth; pos < 0 marks an inactive slot
+    whose cache is left untouched and whose logits are garbage)."""
     fam = cfg.family
     batch = {"tokens": token}
     if fam in ("dense", "moe", "vlm"):
@@ -222,7 +225,7 @@ def decode_step(cfg, params, token, pos, cache):
             # text token in decode: t = h = w = pos (M-RoPE degenerate)
             b = token.shape[0]
             batch["positions"] = jnp.broadcast_to(
-                jnp.asarray(pos, jnp.int32), (b, 1, 3)) \
+                jnp.asarray(pos, jnp.int32).reshape((-1, 1, 1)), (b, 1, 3)) \
                 if cfg.mrope_sections else None
         x = _embed_inputs(cfg, params, batch)
         x, cache, _ = T.stack_apply(params["layers"], x, cfg,
@@ -241,10 +244,8 @@ def decode_step(cfg, params, token, pos, cache):
         cache = {"mamba": mamba_c, "attn": attn_c}
     elif fam == "encdec":
         x = _embed_inputs(cfg, params, batch)
-        b = token.shape[0]
-        pe = L.sinusoid_positions(1, cfg.d_model)[None]
-        # offset the sinusoid by pos dynamically
-        pe = _sinusoid_at(cfg.d_model, pos)[None, None, :]
+        # offset the sinusoid by pos dynamically (scalar or per-slot)
+        pe = _sinusoid_at(cfg.d_model, pos).reshape((-1, 1, cfg.d_model))
         x = x + pe.astype(x.dtype)
         x, self_c, _ = T.stack_apply(
             params["dec_layers"], x, cfg, caches=cache["self"],
@@ -256,11 +257,13 @@ def decode_step(cfg, params, token, pos, cache):
 
 
 def _sinusoid_at(d: int, pos) -> jnp.ndarray:
+    """Sinusoid row(s) at `pos` (scalar -> (d,), vector (B,) -> (B, d))."""
     div = jnp.exp(-jnp.log(10_000.0) * jnp.arange(0, d, 2) / d)
-    ang = jnp.asarray(pos, jnp.float32) * div
-    pe = jnp.zeros((d,), jnp.float32)
-    pe = pe.at[0::2].set(jnp.sin(ang))
-    pe = pe.at[1::2].set(jnp.cos(ang))
+    p = jnp.asarray(pos, jnp.float32)
+    ang = p[..., None] * div
+    pe = jnp.zeros(p.shape + (d,), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(ang))
+    pe = pe.at[..., 1::2].set(jnp.cos(ang))
     return pe
 
 

@@ -1,0 +1,23 @@
+"""Continuous-batching serving subsystem.
+
+    engine.py     request lifecycle admit -> prefill -> decode -> evict
+                  over a fixed pool of cache slots
+    scheduler.py  slot allocation + FCFS admission
+    sampler.py    greedy / temperature / top-k token selection
+    request.py    dataclasses + per-request stats
+    workload.py   synthetic mixed-length arrival-trace generator
+
+See docs/ARCHITECTURE.md §Serving engine for the layer map.
+"""
+
+from repro.serving.engine import DEFAULT_PREFILL_CHUNK, ServingEngine
+from repro.serving.request import Request, percentile
+from repro.serving.sampler import Sampler, SamplerConfig, make_sampler
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.workload import synthetic_trace
+
+__all__ = [
+    "DEFAULT_PREFILL_CHUNK", "ServingEngine", "Request", "percentile",
+    "Sampler", "SamplerConfig", "make_sampler", "SlotScheduler",
+    "synthetic_trace",
+]

@@ -1,0 +1,266 @@
+"""Continuous-batching serving engine over a fixed pool of cache slots.
+
+Request lifecycle (one slot = one batch row of the jitted step):
+
+        submit            slot free & arrived          len == max_new
+    req ------> WAITING ----------------------> ACTIVE --------------> FINISHED
+                          admit = prefill(1xL)         evict: pos[slot] = -1,
+                          + copy into slot row         slot back in free pool
+
+Every decode step runs ONE jitted serve_step over ALL slots with a
+per-slot position vector `pos: (S,) int32` — heterogeneous requests
+(different prompt lengths, admitted at different times) share the same
+compiled program. Inactive slots carry pos = -1: the model masks their
+cache writes and their logits are discarded, so idle rows cost FLOPs
+but never correctness (the fixed batch shape is what keeps one XLA
+executable serving the whole trace).
+
+Admission prefills the prompt at batch size 1 into a fresh single-slot
+cache, then copies that cache into the slot's row of the pooled cache.
+Prompt lengths are bucketed down to a multiple of `prefill_chunk` for
+the jitted prefill (bounding compile count under mixed-length traffic);
+the 0..chunk-1 remainder tokens run through the same serve_step at
+batch 1, so the admitted state is exactly what a full-length prefill
+would have produced — tests/test_serving.py asserts token-exactness.
+
+Family notes: attention caches copy per-slot KV rows; ssm/hybrid copy
+recurrent state rows (their "position" is implicit in the state, the
+pos vector only drives the attention members and bookkeeping). MoE is
+served but not token-exact vs. an isolated run by construction: expert
+capacity is contended by whichever tokens share the decode batch.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serving.request import FINISHED, Request, percentile
+from repro.serving.sampler import Sampler
+from repro.serving.scheduler import SlotScheduler
+from repro.training import train_loop as TL
+
+# Admission prefill buckets prompt lengths down to a multiple of this
+# (remainder tokens run through one-token steps) to bound compile count.
+DEFAULT_PREFILL_CHUNK = 8
+
+
+def _slot_axis(big_shape, small_shape):
+    """Axis along which a cache leaf indexes slots: the axis where the
+    max_slots-sized cache differs from the 1-slot cache. None = the leaf
+    has no slot axis distinguishable (max_slots == 1: replace whole)."""
+    diffs = [i for i, (a, b) in enumerate(zip(big_shape, small_shape))
+             if a != b]
+    if not diffs:
+        return None
+    assert len(diffs) == 1, (big_shape, small_shape)
+    return diffs[0]
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, max_slots: int, max_len: int,
+                 sampler: Optional[Sampler] = None,
+                 prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
+                 eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        # chunked_attention requires kv lengths beyond attn_chunk to be
+        # chunk multiples; max_len is trace-dependent, so round it up.
+        a = cfg.attn_chunk
+        if max_len > a and max_len % a:
+            max_len += a - max_len % a
+        self.max_len = max_len
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.eos_id = eos_id
+        self.sampler = sampler or Sampler()
+        self.scheduler = SlotScheduler(max_slots)
+
+        self.cache = M.init_cache(cfg, max_slots, max_len)
+        big_leaves, self._treedef = jax.tree.flatten(self.cache)
+        small = M.init_cache(cfg, 1, max_len)
+        self._slot_axes = [
+            _slot_axis(b.shape, s.shape)
+            for b, s in zip(big_leaves, jax.tree.leaves(small))]
+
+        self._prefill = jax.jit(TL.make_prefill(cfg), donate_argnums=(2,))
+        self._step = jax.jit(TL.make_serve_step(cfg), donate_argnums=(3,))
+        self._write = jax.jit(self._write_slot, donate_argnums=(0,))
+
+        # per-slot device-mirrored state (pos < 0 = inactive slot)
+        self._tokens = np.zeros((max_slots, 1), np.int32)
+        self._pos = np.full((max_slots,), -1, np.int32)
+
+        self.requests: List[Request] = []
+        self._next_rid = 0
+        self._t0: Optional[float] = None
+        # aggregate counters
+        self.prefill_tokens = 0
+        self.prefill_time = 0.0
+        self.decode_steps = 0
+        self.decode_time = 0.0
+        self.decode_slot_steps = 0     # sum of active slots over steps
+        self.tokens_emitted = 0
+
+    # -- cache slot copy ----------------------------------------------
+    def _write_slot(self, cache, sub, slot):
+        leaves = jax.tree.leaves(cache)
+        subs = jax.tree.leaves(sub)
+        out = []
+        for leaf, s, ax in zip(leaves, subs, self._slot_axes):
+            if ax is None:
+                out.append(s.astype(leaf.dtype))
+                continue
+            start = [0] * leaf.ndim
+            start[ax] = slot
+            out.append(jax.lax.dynamic_update_slice(
+                leaf, s.astype(leaf.dtype), tuple(start)))
+        return jax.tree.unflatten(self._treedef, out)
+
+    # -- submission ----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, *, arrival_time: float = 0.0,
+               enc_frames=None) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size >= 1
+        assert max_new_tokens >= 1
+        assert prompt.size + max_new_tokens <= self.max_len, \
+            (prompt.size, max_new_tokens, self.max_len)
+        if self.cfg.family == "encdec" and enc_frames is None:
+            raise ValueError("encdec requests need enc_frames")
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      arrival_time=arrival_time, enc_frames=enc_frames)
+        self._next_rid += 1
+        self.requests.append(req)
+        self.scheduler.submit(req)
+        return req
+
+    # -- clock ---------------------------------------------------------
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    # -- admission (prefill path) ---------------------------------------
+    def _admit(self, req: Request) -> None:
+        slot = self.scheduler.admit(req)
+        req.t_admitted = self._now()
+        t0 = time.perf_counter()
+
+        L = req.prompt_len
+        chunk = self.prefill_chunk
+        lb = L - (L % chunk) or L      # bucket down; short prompts exact
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(req.prompt[None, :lb])}
+        if self.cfg.family == "encdec":
+            batch["enc_frames"] = jnp.asarray(req.enc_frames[None])
+        sub = M.init_cache(self.cfg, 1, self.max_len)
+        logits, sub = self._prefill(self.params, batch, sub)
+        for i in range(lb, L):         # remainder: one-token steps
+            logits, sub = self._step(
+                self.params, jnp.asarray(req.prompt[None, None, i]),
+                jnp.int32(i), sub)
+        self.cache = self._write(self.cache, sub, slot)
+
+        row = np.asarray(logits)[0, -1, :self.cfg.vocab]
+        tok = self.sampler(row)
+        self.prefill_time += time.perf_counter() - t0
+        self.prefill_tokens += L
+        now = self._now()
+        req.t_first_token = now
+        req.generated.append(tok)
+        self.tokens_emitted += 1
+        if self._done(req, tok):
+            self._finish(req, slot, now)
+        else:
+            self._pos[slot] = L
+            self._tokens[slot, 0] = tok
+
+    def _done(self, req: Request, tok: int) -> bool:
+        return (req.n_generated >= req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id))
+
+    def _finish(self, req: Request, slot: int, now: float) -> None:
+        self.scheduler.release(slot)
+        self._pos[slot] = -1
+        self._tokens[slot, 0] = 0
+        req.t_finished = now
+
+    # -- decode --------------------------------------------------------
+    def _decode_once(self) -> None:
+        active = self.scheduler.active
+        assert active
+        t0 = time.perf_counter()
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(self._tokens),
+            jnp.asarray(self._pos), self.cache)
+        rows = np.asarray(logits)[:, -1, :self.cfg.vocab]   # sync point
+        self.decode_time += time.perf_counter() - t0
+        self.decode_steps += 1
+        self.decode_slot_steps += len(active)
+        now = self._now()
+        for slot in sorted(active):
+            req = active[slot]
+            tok = self.sampler(rows[slot])
+            req.generated.append(tok)
+            self.tokens_emitted += 1
+            if self._done(req, tok):
+                self._finish(req, slot, now)
+            else:
+                self._pos[slot] += 1
+                self._tokens[slot, 0] = tok
+
+    # -- driving -------------------------------------------------------
+    def step(self) -> bool:
+        """Admit every ready request, then run one decode step if any
+        slot is active. Returns False when all work is drained."""
+        while True:
+            req = self.scheduler.next_admission(self._now())
+            if req is None:
+                break
+            self._admit(req)
+        if self.scheduler.n_active:
+            self._decode_once()
+        return self.scheduler.has_work()
+
+    def run(self, *, idle_sleep: float = 1e-3) -> Dict[str, Any]:
+        """Drive to completion; returns the stats report."""
+        while self.scheduler.has_work():
+            if not self.step():
+                break
+            if not self.scheduler.n_active:
+                nxt = self.scheduler.next_arrival_time()
+                if nxt is not None:
+                    time.sleep(max(idle_sleep, min(nxt - self._now(), 0.05)))
+        return self.report()
+
+    # -- stats ----------------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        done = [r for r in self.requests if r.status == FINISHED]
+        lat = [r.latency for r in done]
+        ttft = [r.ttft for r in done]
+        n_emitted = sum(r.n_generated for r in self.requests)
+        assert n_emitted == self.tokens_emitted, \
+            (n_emitted, self.tokens_emitted)
+        return {
+            "n_requests": len(self.requests),
+            "n_finished": len(done),
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tok_s": self.prefill_tokens / max(self.prefill_time,
+                                                       1e-9),
+            "decode_tokens": self.tokens_emitted - len(
+                [r for r in self.requests if r.t_first_token is not None]),
+            "decode_steps": self.decode_steps,
+            "decode_tok_s": (self.decode_slot_steps
+                             / max(self.decode_time, 1e-9)),
+            "mean_occupancy": (self.decode_slot_steps
+                               / max(self.decode_steps, 1)),
+            "latency_p50_s": percentile(lat, 50),
+            "latency_p95_s": percentile(lat, 95),
+            "ttft_p50_s": percentile(ttft, 50),
+            "ttft_p95_s": percentile(ttft, 95),
+        }

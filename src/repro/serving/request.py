@@ -1,0 +1,64 @@
+"""Request lifecycle dataclasses + per-request stats.
+
+A request moves WAITING -> ACTIVE -> FINISHED. While ACTIVE it owns one
+cache slot (a batch row of the engine's KV/state cache); on finish the
+slot is released and the next waiting request is admitted into it —
+that hand-off, happening while other slots keep decoding, is what makes
+the batching "continuous".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+WAITING = "waiting"
+ACTIVE = "active"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int
+    arrival_time: float = 0.0          # seconds on the engine clock
+    enc_frames: Optional[np.ndarray] = None   # encdec: (enc_ctx, d_model)
+
+    # engine-owned state
+    status: str = WAITING
+    slot: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    t_admitted: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_finished: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time-to-first-token (admission prefill completes)."""
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival_time
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.t_finished is None:
+            return None
+        return self.t_finished - self.arrival_time
+
+
+def percentile(values, q: float) -> float:
+    vals = [v for v in values if v is not None]
+    if not vals:
+        return float("nan")
+    return float(np.percentile(np.asarray(vals, np.float64), q))

@@ -1,0 +1,56 @@
+"""Token selection for the serving engine: greedy / temperature / top-k.
+
+Sampling runs host-side on the (vocab,) logits row of each active slot
+— at decode batch sizes the device step is the bottleneck, and host
+sampling keeps the jitted serve_step purely functional (same lowering
+as the dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    kind: str = "greedy"           # greedy | temperature
+    temperature: float = 1.0
+    top_k: int = 0                 # 0 = full vocab (temperature mode)
+
+    def __post_init__(self):
+        if self.kind not in ("greedy", "temperature"):
+            raise ValueError(self.kind)
+        if self.kind == "temperature" and self.temperature <= 0:
+            raise ValueError("temperature must be > 0 (use kind='greedy')")
+
+
+class Sampler:
+    """Stateful sampler: one np.random.Generator shared by all slots so
+    a fixed seed gives a reproducible trace."""
+
+    def __init__(self, config: SamplerConfig | None = None, seed: int = 0):
+        self.config = config or SamplerConfig()
+        self._rng = np.random.default_rng(seed)
+
+    def __call__(self, logits: np.ndarray) -> int:
+        """logits: (vocab,) float32 -> token id."""
+        c = self.config
+        if c.kind == "greedy":
+            return int(np.argmax(logits))
+        z = logits.astype(np.float64) / c.temperature
+        k = min(c.top_k, z.size)       # top_k >= vocab = full vocab
+        if k:
+            kth = np.partition(z, -k)[-k]
+            z = np.where(z >= kth, z, -np.inf)
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+
+def make_sampler(kind: str = "greedy", *, temperature: float = 1.0,
+                 top_k: int = 0, seed: int = 0) -> Sampler:
+    return Sampler(SamplerConfig(kind=kind, temperature=temperature,
+                                 top_k=top_k), seed=seed)

@@ -1,0 +1,83 @@
+"""Slot-level scheduler: fixed pool of cache slots, FCFS admission.
+
+The scheduler is pure bookkeeping — it owns which request sits in which
+slot and who is admitted next; the engine owns the device arrays (the
+per-slot `pos` vector and the batched cache) that mirror its decisions.
+
+Admission policy: strict FCFS over arrival order. The head of the
+waiting queue is admitted as soon as (a) it has arrived on the engine
+clock and (b) a slot is free; later requests never jump the head even
+if a deeper slot would fit them (no head-of-line reordering — keeps
+latency analysis honest).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.serving.request import ACTIVE, FINISHED, WAITING, Request
+
+
+class SlotScheduler:
+    def __init__(self, max_slots: int):
+        assert max_slots >= 1
+        self.max_slots = max_slots
+        self._free: List[int] = list(range(max_slots - 1, -1, -1))
+        self._waiting: deque[Request] = deque()
+        self._active: Dict[int, Request] = {}
+
+    # -- submission ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert req.status == WAITING
+        self._waiting.append(req)
+
+    # -- admission -----------------------------------------------------
+    def next_admission(self, now: float) -> Optional[Request]:
+        """FCFS head if it has arrived and a slot is free, else None."""
+        if not self._free or not self._waiting:
+            return None
+        head = self._waiting[0]
+        if head.arrival_time > now:
+            return None
+        return head
+
+    def admit(self, req: Request) -> int:
+        """Bind the queue head to a free slot; returns the slot id."""
+        assert self._waiting and self._waiting[0] is req
+        self._waiting.popleft()
+        slot = self._free.pop()
+        req.slot = slot
+        req.status = ACTIVE
+        self._active[slot] = req
+        return slot
+
+    # -- release -------------------------------------------------------
+    def release(self, slot: int) -> None:
+        req = self._active.pop(slot)
+        req.status = FINISHED
+        req.slot = -1
+        self._free.append(slot)
+
+    # -- introspection -------------------------------------------------
+    @property
+    def active(self) -> Dict[int, Request]:
+        return dict(self._active)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def has_work(self) -> bool:
+        return bool(self._waiting or self._active)
+
+    def next_arrival_time(self) -> Optional[float]:
+        return self._waiting[0].arrival_time if self._waiting else None

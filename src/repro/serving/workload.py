@@ -1,0 +1,37 @@
+"""Synthetic mixed-length workload generator.
+
+One trace builder shared by the serving CLI (launch/serve.py) and the
+serving benchmark (benchmarks/bench_serving.py) so "the same trace
+parameters" always mean the same workload: prompt lengths uniform over
+an INCLUSIVE [lo, hi] range, arrivals Poisson at `arrival_rate` req/s
+(0 = burst, everything at t=0), random-token prompts, and — for encdec
+archs — a synthetic encoder-frame block per request.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+TraceItem = Tuple[np.ndarray, int, float, Optional[np.ndarray]]
+#                 (prompt, max_new_tokens, arrival_time, enc_frames)
+
+
+def synthetic_trace(cfg, n: int, *, rng: np.random.Generator,
+                    len_range: Tuple[int, int] = (8, 48), gen: int = 16,
+                    arrival_rate: float = 0.0) -> List[TraceItem]:
+    lo, hi = len_range
+    assert 1 <= lo <= hi, len_range
+    lens = rng.integers(lo, hi + 1, n)
+    arrivals = (np.cumsum(rng.exponential(1.0 / arrival_rate, n))
+                if arrival_rate > 0 else np.zeros(n))
+    trace: List[TraceItem] = []
+    for i in range(n):
+        prompt = rng.integers(0, cfg.vocab, int(lens[i])).astype(np.int32)
+        enc = None
+        if cfg.family == "encdec":
+            enc = rng.normal(size=(cfg.enc_ctx, cfg.d_model)) \
+                .astype(np.float32)
+        trace.append((prompt, gen, float(arrivals[i]), enc))
+    return trace

@@ -11,7 +11,11 @@ the model loss with:
   * donated params/opt_state (in launch/train.py's jit wrapper).
 
 serve_step(params, token, pos, cache) — one decode token; prefill()
-builds the cache. Both are what launch/dryrun.py lowers.
+builds the cache. Both are what launch/dryrun.py lowers. `pos` is a
+scalar for the lock-step single-batch path, or a (B,) per-slot vector
+for the continuous-batching engine (repro.serving): each row of the
+batch is an independent request at its own depth, pos < 0 marks an
+inactive slot. One jitted serve_step serves both shapes.
 """
 
 from __future__ import annotations
@@ -93,6 +97,8 @@ def make_train_step(cfg, optimizer: AdamW, *, accum: int = 1,
 
 def make_serve_step(cfg):
     def serve_step(params, token, pos, cache):
+        # pos: scalar (uniform batch) or (B,) int32 per-slot vector —
+        # threaded straight through to the per-slot cache writes.
         return M.decode_step(cfg, params, token, pos, cache)
     return serve_step
 
