@@ -1,16 +1,89 @@
-"""Shared benchmark utilities: timing, CSV emission.
+"""Shared benchmark utilities: timing, CSV emission, JSON persistence.
 
 `time_jax` lives in repro.tuning.timing so the autotuner and the
 benchmark tables score candidates with the same clock; this module
 keeps the historical import site working.
+
+Every `emit()` is recorded in a process-local registry;
+`write_bench_json()` persists the registry as ``BENCH_<rev>.json``
+(rev = short git hash of the working tree, "norev" outside a checkout)
+so the perf trajectory is machine-tracked across PRs — CI uploads the
+file as an artifact.
 """
 
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import subprocess
+
 from repro.tuning.timing import time_jax  # noqa: F401  (re-export)
+
+_RESULTS: list[dict] = []
 
 
 def emit(name: str, seconds: float, derived: str = "") -> str:
     line = f"{name},{seconds*1e6:.1f},{derived}"
+    _RESULTS.append({"name": name, "us_per_call": round(seconds * 1e6, 3),
+                     "derived": derived})
     print(line)
     return line
+
+
+def bench_results() -> list[dict]:
+    return list(_RESULTS)
+
+
+def reset_results() -> None:
+    _RESULTS.clear()
+
+
+def _git_rev() -> str:
+    """Short hash of HEAD, with a -dirty suffix when the working tree
+    has uncommitted changes (so a pre-commit run can never overwrite
+    the genuine record measured at that commit); "norev" outside a
+    usable checkout."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=root)
+        if out.returncode != 0:
+            return "norev"
+        rev = out.stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10, cwd=root)
+        if dirty.returncode == 0 and dirty.stdout.strip():
+            rev += "-dirty"
+        return rev
+    except (OSError, subprocess.SubprocessError):
+        return "norev"
+
+
+def write_bench_json(directory: str | None = None,
+                     tag: str | None = None) -> str:
+    """Persist the emit() registry as BENCH_<rev>[_<tag>].json (repo
+    root by default) and return the path. Re-running on the same rev
+    overwrites — one file per (revision, tag) is the machine-readable
+    contract; standalone suite __main__s pass their suite name as tag
+    so they never clobber the harness's full-run file."""
+    import jax
+
+    rev = _git_rev()
+    directory = directory or os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    name = f"BENCH_{rev}_{tag}.json" if tag else f"BENCH_{rev}.json"
+    path = os.path.join(directory, name)
+    doc = {
+        "rev": rev,
+        "generated_at": datetime.datetime.now().isoformat(
+            timespec="seconds"),
+        "jax": jax.__version__,
+        "platform": jax.devices()[0].platform,
+        "results": bench_results(),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path

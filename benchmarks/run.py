@@ -3,7 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--autotune]
     python benchmarks/run.py --autotune        # script form also works
 
-Output contract: ``name,us_per_call,derived`` CSV lines.
+Output contract: ``name,us_per_call,derived`` CSV lines, plus a
+machine-readable ``BENCH_<git-rev>.json`` written at the end of every
+run (benchmarks.common.write_bench_json) so the perf trajectory is
+tracked across PRs — CI uploads it as an artifact.
 
 --autotune runs the tile-autotuning sweep (repro.tuning) for the suites
 that support it and persists winners to the tuning cache
@@ -27,8 +30,9 @@ import sys
 import traceback
 
 from benchmarks import (bench_add, bench_arch_step, bench_distributed_gemm,
-                        bench_matmul, bench_roofline_table, bench_serving,
-                        bench_shared_memory)
+                        bench_fused_epilogue, bench_matmul,
+                        bench_roofline_table, bench_serving,
+                        bench_shared_memory, common)
 
 SUITES = {
     "matmul": bench_matmul.run,               # Table 2 / Fig 7
@@ -38,6 +42,7 @@ SUITES = {
     "arch_step": bench_arch_step.run,          # framework-level
     "roofline_table": bench_roofline_table.run,  # deliverable (g)
     "serving": bench_serving.run,              # continuous-batching engine
+    "fused_epilogue": bench_fused_epilogue.run,  # fused-flush GEMM/SwiGLU
 }
 
 # Suites whose run() accepts autotune= and sweeps the tuner.
@@ -68,6 +73,12 @@ def main() -> None:
         except Exception:
             failures.append(name)
             traceback.print_exc()
+    if common.bench_results():
+        # machine-readable perf trajectory: the untagged BENCH_<rev>.json
+        # is reserved for full runs; partial runs (--only / --autotune's
+        # suite restriction) get a tag so they never clobber it.
+        tag = args.only or ("autotune" if args.autotune else None)
+        print(f"# wrote {common.write_bench_json(tag=tag)}")
     if failures:
         print("# FAILED suites:", failures)
         sys.exit(1)

@@ -32,15 +32,21 @@ class BlockConfig:
     bn: int
     bk: int
 
-    def vmem_bytes(self, itemsize: int, double_buffer: bool = True) -> int:
+    def vmem_bytes(self, itemsize: int, double_buffer: bool = True,
+                   n_rhs: int = 1) -> int:
+        """Working set of the tiled kernel. n_rhs > 1 models the fused
+        dual-GEMM variants (kernels.matmul.gated_matmul_tiled): one A
+        tile staged against n_rhs B operands, one accumulator each."""
         mult = 2 if double_buffer else 1
-        tiles = (self.bm * self.bk + self.bk * self.bn) * itemsize * mult
-        acc = self.bm * self.bn * 4  # f32 accumulator scratch
+        tiles = (self.bm * self.bk
+                 + n_rhs * self.bk * self.bn) * itemsize * mult
+        acc = n_rhs * self.bm * self.bn * 4  # f32 accumulator scratch
         return tiles + acc
 
-    def arithmetic_intensity(self, itemsize: int) -> float:
-        flops = 2.0 * self.bm * self.bn * self.bk
-        bytes_moved = (self.bm * self.bk + self.bk * self.bn) * itemsize
+    def arithmetic_intensity(self, itemsize: int, n_rhs: int = 1) -> float:
+        flops = 2.0 * n_rhs * self.bm * self.bn * self.bk
+        bytes_moved = (self.bm * self.bk
+                       + n_rhs * self.bk * self.bn) * itemsize
         return flops / bytes_moved
 
 
@@ -89,6 +95,7 @@ def choose_block_config(
     itemsize: int = 2,
     chip: hw.ChipSpec = hw.DEFAULT_CHIP,
     vmem_fraction: float = 0.5,
+    n_rhs: int = 1,
 ) -> BlockConfig:
     """Pick (bm, bn, bk) for an (m, k) x (k, n) GEMM.
 
@@ -97,6 +104,9 @@ def choose_block_config(
     working set fits the VMEM budget. bk is kept >= 512 when possible so
     the k-grid is short (fewer accumulator passes), mirroring the
     paper's 'one long k loop inside the block' structure.
+
+    n_rhs=2 sizes tiles for the fused dual-GEMM (gated) kernel, whose
+    working set carries two B tiles and two accumulators per A tile.
     """
     budget = int(chip.vmem_bytes * vmem_fraction)
     lane = chip.lane
@@ -110,7 +120,7 @@ def choose_block_config(
     bk = _round_down_pow2_mult(bk, lane)
 
     cfg = BlockConfig(bm, bn, bk)
-    while cfg.vmem_bytes(itemsize) > budget:
+    while cfg.vmem_bytes(itemsize, n_rhs=n_rhs) > budget:
         # Shrink the dim that frees the most bytes while hurting AI least:
         # prefer shrinking bk first below 512, then the larger of bm/bn.
         if cfg.bk > 512:
@@ -139,6 +149,25 @@ def hbm_traffic_bytes(
     n_n = math.ceil(n / cfg.bn)
     a_bytes = m * k * itemsize * n_n
     b_bytes = k * n * itemsize * n_m
+    c_bytes = m * n * itemsize
+    return a_bytes + b_bytes + c_bytes
+
+
+def gated_traffic_bytes(
+    m: int, n: int, k: int, cfg: BlockConfig, itemsize: int
+) -> int:
+    """Bytes moved HBM->VMEM by the fused dual-GEMM (gated) kernel.
+
+    One A stream feeds BOTH weight operands (A read once per N-block
+    column, exactly as in the single-GEMM model), each of the two B
+    operands is read once per M-block row, and only the final gated
+    product is written — the two (m, n) intermediates of the unfused
+    composition never touch HBM.
+    """
+    n_m = math.ceil(m / cfg.bm)
+    n_n = math.ceil(n / cfg.bn)
+    a_bytes = m * k * itemsize * n_n
+    b_bytes = 2 * k * n * itemsize * n_m
     c_bytes = m * n * itemsize
     return a_bytes + b_bytes + c_bytes
 

@@ -2,18 +2,24 @@
 
 Every dense contraction in the model zoo — QKV/O projections, FFN, MoE
 expert GEMMs, logits, SSD chunk matmuls — routes through `matmul()` /
-`dense()` here, so switching the global backend swaps the paper's tiled
-kernel in and out of the *whole framework* (the reproduce-vs-optimise
-axis of EXPERIMENTS.md). The "tuned" backend additionally swaps the
-static tile chooser for per-shape winners from the autotuner cache
-(repro.tuning; launchers warm it via tuning.warm_start).
+`dense()` / `gated_mlp()` here, so switching the global backend swaps
+the paper's tiled kernel in and out of the *whole framework* (the
+reproduce-vs-optimise axis of EXPERIMENTS.md). The "tuned" backend
+additionally swaps the static tile chooser for per-shape winners from
+the autotuner cache (repro.tuning; launchers warm it via
+tuning.warm_start).
 
 Responsibilities on top of kernels.ops:
   * batched / n-d shapes (leading dims folded into M);
   * complex64 decomposition into real GEMMs (core.precision, Table 2);
   * f64 routing (no MXU path — XLA or interpret only);
-  * a custom VJP so the Pallas backends train: both cotangent GEMMs
-    recurse through the same chokepoint.
+  * fused-epilogue eligibility: `dense(activation=..., residual=...)`
+    and `gated_mlp()` run the fused Pallas flush only for real
+    f32/bf16-class dtypes on a Pallas backend; f64/complex and the xla
+    backend fall back to the same composition unfused;
+  * custom VJPs so the Pallas backends train: every cotangent GEMM —
+    including those of the fused dense/gated paths — recurses through
+    the same chokepoint, so autotuned tiles serve backward too.
 """
 
 from __future__ import annotations
@@ -102,10 +108,182 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
     return out.reshape(lead + out.shape[-2:])
 
 
-def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
-          *, out_dtype=None, backend: str | None = None) -> jnp.ndarray:
-    """y = x @ w (+ b) for x: (..., K), w: (K, N) — the layer-level API."""
-    y = matmul(x, w, out_dtype=out_dtype, backend=backend)
+# ----------------------------------------------------------------------
+# Fused epilogues: dense(activation=, residual=) and gated_mlp()
+# ----------------------------------------------------------------------
+
+_ACTIVATIONS = {"gelu": jax.nn.gelu, "silu": jax.nn.silu}
+_ACT_EPILOGUE = {"gelu": "bias_gelu", "silu": "bias_silu", None: "bias"}
+_PALLAS_BACKENDS = ("pallas", "pallas_interpret", "tuned", "tuned_interpret")
+
+
+def _fusible(dtype, backend: str) -> bool:
+    """Fused epilogues run only where the tiled kernel itself runs: a
+    Pallas backend on a real non-f64 dtype. Everything else (xla, naive,
+    f64 without an MXU path, complex decomposition) composes the same
+    function unfused through the plain chokepoint."""
+    return (backend in _PALLAS_BACKENDS
+            and not jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating)
+            and jnp.dtype(dtype) != jnp.float64)
+
+
+def _dense_ep_2d(x, w, b, r, activation, backend, out_dtype):
+    """y = act(x @ w + b) + r on 2D operands, fused where eligible.
+
+    Fusion rule: (bias, activation) take the fused flush when present;
+    a residual rides the fused flush only when it is the *sole*
+    epilogue (the kernel lattice is bias*/act XOR residual)."""
+    if not _fusible(x.dtype, backend):
+        y = _matmul_2d(x, w, backend, out_dtype)
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        if activation is not None:
+            y = _ACTIVATIONS[activation](y)
+        if r is not None:
+            y = y + r.astype(y.dtype)
+        return y
+    if b is not None or activation is not None:
+        bias = b if b is not None else jnp.zeros((w.shape[-1],), x.dtype)
+        y = _ops.matmul(x, w, backend=backend, out_dtype=out_dtype,
+                        epilogue=_ACT_EPILOGUE[activation], bias=bias)
+        if r is not None:
+            y = y + r.astype(y.dtype)
+        return y
+    if r is not None:
+        if r.shape == (x.shape[0], w.shape[-1]):
+            return _ops.matmul(x, w, backend=backend, out_dtype=out_dtype,
+                               epilogue="residual", residual=r)
+        # broadcastable-but-not-(m, n) residual: add it unfused so the
+        # xla and Pallas backends keep computing the same function
+        y = _ops.matmul(x, w, backend=backend, out_dtype=out_dtype)
+        return y + r.astype(y.dtype)
+    return _ops.matmul(x, w, backend=backend, out_dtype=out_dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _dense_ep_vjp(x, w, b, r, activation, backend, out_dtype):
+    return _dense_ep_2d(x, w, b, r, activation, backend, out_dtype)
+
+
+def _dense_ep_fwd(x, w, b, r, activation, backend, out_dtype):
+    return _dense_ep_2d(x, w, b, r, activation, backend, out_dtype), \
+        (x, w, b, r)
+
+
+def _dense_ep_bwd(activation, backend, out_dtype, res, g):
+    """Differentiate the unfused composition built on the matmul
+    chokepoint: the recompute GEMM and both cotangent GEMMs all recurse
+    through _matmul_vjp, so the Pallas/tuned backends serve them too."""
+    x, w, b, r = res
+
+    def ref(ops_):
+        z = _matmul_vjp(ops_["x"], ops_["w"], backend, out_dtype)
+        if "b" in ops_:
+            z = z + ops_["b"].astype(z.dtype)
+        if activation is not None:
+            z = _ACTIVATIONS[activation](z)
+        if "r" in ops_:
+            z = z + ops_["r"].astype(z.dtype)
+        return z
+
+    prim = {"x": x, "w": w}
     if b is not None:
-        y = y + b.astype(y.dtype)
-    return y
+        prim["b"] = b
+    if r is not None:
+        prim["r"] = r
+    out, vjp = jax.vjp(ref, prim)
+    d = vjp(g.astype(out.dtype))[0]
+    return d["x"], d["w"], d.get("b"), d.get("r")
+
+
+_dense_ep_vjp.defvjp(_dense_ep_fwd, _dense_ep_bwd)
+
+
+def _gated_2d(x, wg, wu, backend, out_dtype):
+    if not _fusible(x.dtype, backend):
+        g = _matmul_2d(x, wg, backend, out_dtype)
+        u = _matmul_2d(x, wu, backend, out_dtype)
+        return (jax.nn.silu(g) * u).astype(out_dtype)
+    return _ops.gated_matmul(x, wg, wu, backend=backend,
+                             out_dtype=out_dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _gated_vjp(x, wg, wu, backend, out_dtype):
+    return _gated_2d(x, wg, wu, backend, out_dtype)
+
+
+def _gated_fwd(x, wg, wu, backend, out_dtype):
+    return _gated_2d(x, wg, wu, backend, out_dtype), (x, wg, wu)
+
+
+def _gated_bwd(backend, out_dtype, res, g):
+    x, wg, wu = res
+
+    def ref(x_, wg_, wu_):
+        gt = _matmul_vjp(x_, wg_, backend, out_dtype)
+        up = _matmul_vjp(x_, wu_, backend, out_dtype)
+        return jax.nn.silu(gt) * up
+
+    out, vjp = jax.vjp(ref, x, wg, wu)
+    return vjp(g.astype(out.dtype))
+
+
+_gated_vjp.defvjp(_gated_fwd, _gated_bwd)
+
+
+def _fold_leading(x):
+    return x.reshape(-1, x.shape[-1]), x.shape[:-1]
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
+          *, activation: str | None = None,
+          residual: jnp.ndarray | None = None,
+          out_dtype=None, backend: str | None = None) -> jnp.ndarray:
+    """y = act(x @ w + b) + residual for x: (..., K), w: (K, N) — the
+    layer-level API. activation in {None, "gelu", "silu"}. residual
+    should match the output shape (the fused flush requires it; a 2D
+    broadcastable residual is added unfused instead). On Pallas backends
+    bias/activation (and a lone full-shape residual) are applied inside
+    the kernel's flush phase — see kernels.matmul EPILOGUES."""
+    backend = backend or _backend()
+    out_dtype = out_dtype or x.dtype
+    if b is None and activation is None and residual is None:
+        return matmul(x, w, out_dtype=out_dtype, backend=backend)
+    assert activation in (None, *_ACTIVATIONS), activation
+    if x.ndim == 2:
+        return _dense_ep_vjp(x, w, b, residual, activation, backend,
+                             out_dtype)
+    xf, lead = _fold_leading(x)
+    rf = residual.reshape(-1, residual.shape[-1]) \
+        if residual is not None else None
+    out = _dense_ep_vjp(xf, w, b, rf, activation, backend, out_dtype)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def gated_mlp(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+              *, out_dtype=None, backend: str | None = None) -> jnp.ndarray:
+    """silu(x @ w_gate) * (x @ w_up) — the SwiGLU hidden phase.
+
+    x: (..., K); weights (K, F), or batched (..., K, F) with matching
+    leading dims (MoE expert banks — vmapped over the 2D chokepoint).
+    Pallas backends run the dual-GEMM kernel: one A stream against both
+    weight operands, no HBM intermediates."""
+    backend = backend or _backend()
+    out_dtype = out_dtype or x.dtype
+    assert w_gate.shape == w_up.shape, (w_gate.shape, w_up.shape)
+    if w_gate.ndim == 2:
+        if x.ndim == 2:
+            return _gated_vjp(x, w_gate, w_up, backend, out_dtype)
+        xf, lead = _fold_leading(x)
+        out = _gated_vjp(xf, w_gate, w_up, backend, out_dtype)
+        return out.reshape(*lead, w_gate.shape[-1])
+    assert x.shape[:-2] == w_gate.shape[:-2], (x.shape, w_gate.shape)
+    lead = x.shape[:-2]
+    xf = x.reshape((-1,) + x.shape[-2:])
+    gf = w_gate.reshape((-1,) + w_gate.shape[-2:])
+    uf = w_up.reshape((-1,) + w_up.shape[-2:])
+    out = jax.vmap(
+        lambda x_, g_, u_: _gated_vjp(x_, g_, u_, backend, out_dtype)
+    )(xf, gf, uf)
+    return out.reshape(lead + out.shape[-2:])

@@ -57,6 +57,36 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _usable_block(block, served: bool) -> bool:
+    """Discard degenerate tile configs (a corrupt cache entry must fall
+    back to the static chooser, not crash the padding arithmetic)."""
+    if block is None:
+        return False
+    ok = block.bm > 0 and block.bn > 0 and block.bk > 0
+    if not ok and not served:
+        raise ValueError(f"invalid block config {block}")
+    return ok
+
+
+def _epilogue_operand(epilogue, bias, residual, m, n, mp, np_):
+    """Validate + pad the flush-phase operand to the padded tile grid.
+    The operand keeps its own dtype — the kernel casts it to the
+    accumulator dtype, mirroring the unfused ref.epilogue_ref cast, so
+    a residual/bias wider than the inputs loses no precision."""
+    if epilogue == "none":
+        assert bias is None and residual is None, \
+            "bias/residual operands need an epilogue"
+        return None
+    if epilogue == "residual":
+        assert residual is not None and residual.shape == (m, n), epilogue
+        return _pad2(residual, mp, np_)
+    assert epilogue in _mm.EPILOGUES, epilogue
+    assert bias is not None, f"epilogue={epilogue} needs bias="
+    e = bias.reshape(1, -1)
+    assert e.shape == (1, n), (bias.shape, n)
+    return _pad2(e, 1, np_)
+
+
 def matmul(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -65,8 +95,17 @@ def matmul(
     out_dtype=None,
     block: blocking.BlockConfig | None = None,
     chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    epilogue: str = "none",
+    bias: jnp.ndarray | None = None,
+    residual: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """2D real GEMM through the selected backend, padding as needed."""
+    """2D real GEMM through the selected backend, padding as needed.
+
+    epilogue/bias/residual select a fused flush (kernels.matmul
+    EPILOGUES): the Pallas backends apply it inside the kernel on the
+    f32 accumulator; xla and naive apply the same composition unfused
+    (ref.epilogue_ref), so every backend computes the same function.
+    """
     assert a.ndim == 2 and b.ndim == 2, (a.shape, b.shape)
     m, k = a.shape
     k2, n = b.shape
@@ -74,12 +113,16 @@ def matmul(
     out_dtype = out_dtype or a.dtype
 
     if backend == "xla":
-        return _ref.matmul_ref(a, b, out_dtype=out_dtype)
+        y = _ref.matmul_ref(a, b, out_dtype=out_dtype)
+        return _ref.epilogue_ref(y, epilogue, bias, residual)
 
+    served = False
     if backend.startswith("tuned"):
         backend = resolve_tuned(backend)
         if block is None:
-            block = _tcache.get_cache().get_matmul(m, n, k, a.dtype, backend)
+            block = _tcache.get_cache().get_matmul(
+                m, n, k, a.dtype, backend, epilogue=epilogue)
+            served = block is not None
             # miss / fingerprint mismatch -> block stays None and the
             # static chooser below picks the paper's default tiles.
 
@@ -91,16 +134,71 @@ def matmul(
         mp, np_ = _round_up(m, sub), _round_up(n, chip.lane)
         out = _mmn.matmul_naive(
             _pad2(a, mp, k), _pad2(b, k, np_),
-            out_dtype=out_dtype, interpret=interpret)
-        return out[:m, :n]
+            out_dtype=out_dtype, interpret=interpret)[:m, :n]
+        return _ref.epilogue_ref(out, epilogue, bias, residual)
 
-    if block is None:
+    if not _usable_block(block, served):
         block = blocking.choose_block_config(m, n, k, itemsize, chip)
+    # padding to block multiples guarantees the kernel's clamp
+    # re-validation passes: every dim is a multiple of its tile edge.
     mp = _round_up(m, block.bm)
     np_ = _round_up(n, block.bn)
     kp = _round_up(k, block.bk)
+    e = _epilogue_operand(epilogue, bias, residual, m, n, mp, np_)
     out = _mm.matmul_tiled(
         _pad2(a, mp, kp), _pad2(b, kp, np_),
+        bm=block.bm, bn=block.bn, bk=block.bk,
+        out_dtype=out_dtype, interpret=interpret,
+        epilogue=epilogue, epilogue_operand=e)
+    return out[:m, :n]
+
+
+def gated_matmul(
+    a: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    *,
+    backend: str = "xla",
+    out_dtype=None,
+    block: blocking.BlockConfig | None = None,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+) -> jnp.ndarray:
+    """silu(a @ w_gate) * (a @ w_up) — the SwiGLU hidden phase.
+
+    Pallas backends run the dual-GEMM kernel (one A stream, two weight
+    operands, zero HBM intermediates); xla/naive compose it unfused.
+    Tiles come from the gated autotuner cache entries or the n_rhs=2
+    static chooser (doubled B-side working set).
+    """
+    assert a.ndim == w_gate.ndim == w_up.ndim == 2
+    m, k = a.shape
+    assert w_gate.shape == w_up.shape == (k, w_gate.shape[1])
+    n = w_gate.shape[1]
+    out_dtype = out_dtype or a.dtype
+
+    if backend == "xla" or backend.startswith("naive"):
+        g = matmul(a, w_gate, backend=backend, out_dtype=out_dtype,
+                   chip=chip)
+        u = matmul(a, w_up, backend=backend, out_dtype=out_dtype, chip=chip)
+        return (jax.nn.silu(g) * u).astype(out_dtype)
+
+    served = False
+    if backend.startswith("tuned"):
+        backend = resolve_tuned(backend)
+        if block is None:
+            block = _tcache.get_cache().get_gated(m, n, k, a.dtype, backend)
+            served = block is not None
+
+    interpret = backend.endswith("interpret")
+    itemsize = jnp.dtype(a.dtype).itemsize
+    if not _usable_block(block, served):
+        block = blocking.choose_block_config(m, n, k, itemsize, chip,
+                                             n_rhs=2)
+    mp = _round_up(m, block.bm)
+    np_ = _round_up(n, block.bn)
+    kp = _round_up(k, block.bk)
+    out = _mm.gated_matmul_tiled(
+        _pad2(a, mp, kp), _pad2(w_gate, kp, np_), _pad2(w_up, kp, np_),
         bm=block.bm, bn=block.bn, bk=block.bk,
         out_dtype=out_dtype, interpret=interpret)
     return out[:m, :n]

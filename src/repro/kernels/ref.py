@@ -19,6 +19,35 @@ def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
     return jnp.matmul(a, b, preferred_element_type=acc_dtype).astype(out_dtype)
 
 
+def epilogue_ref(y: jnp.ndarray, epilogue: str,
+                 bias: jnp.ndarray | None = None,
+                 residual: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Unfused composition of the kernel epilogues (kernels.matmul
+    EPILOGUES) — the XLA path and the parity oracle for the fused flush."""
+    if epilogue == "none":
+        return y
+    if epilogue == "residual":
+        return y + residual.astype(y.dtype)
+    y = y + bias.reshape(-1).astype(y.dtype)
+    if epilogue == "bias_gelu":
+        y = jax.nn.gelu(y)
+    elif epilogue == "bias_silu":
+        y = jax.nn.silu(y)
+    return y
+
+
+def gated_matmul_ref(a: jnp.ndarray, w_gate: jnp.ndarray,
+                     w_up: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """silu(A @ Wg) * (A @ Wu) with f32 accumulation, gate product in
+    the accumulator dtype — the oracle for the dual-GEMM kernel."""
+    if out_dtype is None:
+        out_dtype = a.dtype
+    acc_dtype = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
+    g = jnp.matmul(a, w_gate, preferred_element_type=acc_dtype)
+    u = jnp.matmul(a, w_up, preferred_element_type=acc_dtype)
+    return (jax.nn.silu(g) * u).astype(out_dtype)
+
+
 def add_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return a + b
 

@@ -1,5 +1,12 @@
 """Feed-forward blocks: SwiGLU / GELU MLPs. All GEMMs route through the
-core.gemm chokepoint (the paper's kernel under every FFN)."""
+core.gemm chokepoint (the paper's kernel under every FFN).
+
+The hot path is fused on Pallas backends: SwiGLU's gate/up GEMMs run as
+one dual-GEMM kernel (`gemm.gated_mlp` — no (M, d_ff) intermediates in
+HBM), the GELU MLP's bias+activation ride the up-projection's flush
+phase, and the block residual can ride the down-projection
+(`residual=`). On xla the same compositions run unfused — numerics are
+backend-checked in tests/test_fused_epilogue.py."""
 
 from __future__ import annotations
 
@@ -28,10 +35,11 @@ def mlp_init(key, cfg, *, d_model=None, d_ff=None):
     }
 
 
-def mlp_apply(p, x, cfg):
+def mlp_apply(p, x, cfg, *, residual=None):
+    """residual (e.g. the block's skip connection) is fused into the
+    down-projection's flush where the epilogue lattice allows."""
     if cfg.mlp == "swiglu":
-        g = L.dense_apply(p["w_gate"], x)
-        u = L.dense_apply(p["w_up"], x)
-        return L.dense_apply(p["w_down"], jax.nn.silu(g) * u)
-    h = jax.nn.gelu(L.dense_apply(p["w_in"], x))
-    return L.dense_apply(p["w_out"], h)
+        h = L.gated_apply(p["w_gate"], p["w_up"], x)
+        return L.dense_apply(p["w_down"], h, residual=residual)
+    h = L.dense_apply(p["w_in"], x, activation="gelu")
+    return L.dense_apply(p["w_out"], h, residual=residual)

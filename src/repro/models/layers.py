@@ -23,8 +23,18 @@ def dense_init(key, d_in: int, d_out: int, *, dtype, scale: float | None = None,
     return p
 
 
-def dense_apply(p, x, *, out_dtype=None):
-    return gemm.dense(x, p["w"].astype(x.dtype), p.get("b"), out_dtype=out_dtype)
+def dense_apply(p, x, *, out_dtype=None, activation=None, residual=None):
+    """activation/residual ride the kernel's fused flush phase on Pallas
+    backends (core.gemm.dense epilogue routing)."""
+    return gemm.dense(x, p["w"].astype(x.dtype), p.get("b"),
+                      activation=activation, residual=residual,
+                      out_dtype=out_dtype)
+
+
+def gated_apply(p_gate, p_up, x, *, out_dtype=None):
+    """SwiGLU hidden phase through the dual-GEMM chokepoint."""
+    return gemm.gated_mlp(x, p_gate["w"].astype(x.dtype),
+                          p_up["w"].astype(x.dtype), out_dtype=out_dtype)
 
 
 def rmsnorm_init(d: int, *, dtype):

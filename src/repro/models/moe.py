@@ -142,9 +142,11 @@ def moe_apply(p, x, cfg):
     # the G->E resharding below is the expert-parallel all-to-all
     ex_in = constrain(ex_in, "tp", "dp", None)
 
-    gate = gemm.matmul(ex_in, p["w_gate"].astype(ex_in.dtype))
-    up = gemm.matmul(ex_in, p["w_up"].astype(ex_in.dtype))
-    h = jax.nn.silu(gate) * up
+    # expert SwiGLU through the dual-GEMM chokepoint: on Pallas backends
+    # each expert's gate/up GEMMs fuse into one kernel pass (vmapped
+    # over the expert bank), eliminating both (E, G*C, F) intermediates.
+    h = gemm.gated_mlp(ex_in, p["w_gate"].astype(ex_in.dtype),
+                       p["w_up"].astype(ex_in.dtype))
     ex_out = gemm.matmul(h, p["w_down"].astype(h.dtype))
     ex_out = constrain(ex_out.reshape(e, g, c, d), "tp", "dp", None, None)
 

@@ -97,9 +97,13 @@ def block_apply(p, x, cfg, *, positions=None, causal=True, cache=None,
     aux = {}
     if cfg.moe is not None:
         h, aux = M.moe_apply(p["moe"], _norm_apply(cfg, p["mlp_norm"], x), cfg)
+        out = x + h
     else:
-        h = F.mlp_apply(p["mlp"], _norm_apply(cfg, p["mlp_norm"], x), cfg)
-    return constrain(x + h, "dp", None, None), new_cache, aux
+        # the skip connection rides the down-projection's fused flush on
+        # Pallas backends (residual epilogue); identical composition on xla
+        out = F.mlp_apply(p["mlp"], _norm_apply(cfg, p["mlp_norm"], x), cfg,
+                          residual=x)
+    return constrain(out, "dp", None, None), new_cache, aux
 
 
 # ----------------------------------------------------------------------

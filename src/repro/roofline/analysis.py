@@ -19,7 +19,7 @@ from typing import Optional
 
 import jax
 
-from repro.core import hw
+from repro.core import blocking, hw
 from repro.roofline import hlo as H
 
 
@@ -60,6 +60,92 @@ def model_flops(cfg, cell, *, kind: str) -> float:
         tokens = cell.global_batch * cell.seq_len
         return 2.0 * active * tokens
     return 2.0 * active * cell.global_batch         # decode: one token/seq
+
+
+# ----------------------------------------------------------------------
+# Fused-kernel HBM accounting (EXPERIMENTS §HBM-traffic accounting)
+#
+# The fused-epilogue / dual-GEMM wins are bandwidth wins, so they are
+# assertable on this CPU-only container from the same static traffic
+# models the Fig.-8 reproduction uses (core.blocking) — no TPU needed.
+# ----------------------------------------------------------------------
+
+def epilogue_traffic_bytes(m: int, n: int, k: int, itemsize: int,
+                           epilogue: str, cfg=None,
+                           chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+                           fused: bool = True) -> int:
+    """HBM bytes for one GEMM + epilogue (bias/activation/residual).
+
+    Unfused, the epilogue is a separate elementwise pass: the (m, n)
+    GEMM result is written, re-read together with the epilogue operand,
+    and written again. Fused, the epilogue runs in the kernel's flush on
+    the VMEM accumulator: only the operand read is added — the (m, n)
+    intermediate never round-trips, saving 2*m*n*itemsize bytes.
+    """
+    if cfg is None:
+        cfg = blocking.choose_block_config(m, n, k, itemsize, chip=chip)
+    total = blocking.hbm_traffic_bytes(m, n, k, cfg, itemsize)
+    if epilogue == "none":
+        return total
+    operand = m * n * itemsize if epilogue == "residual" else n * itemsize
+    total += operand
+    if not fused:
+        total += 2 * m * n * itemsize   # write + re-read the intermediate
+    return total
+
+
+def gated_mlp_traffic(m: int, d_model: int, d_ff: int, itemsize: int,
+                      *, fused: bool,
+                      chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+                      cfg_hidden=None, cfg_down=None) -> dict:
+    """HBM bytes for one SwiGLU MLP call, fused vs unfused.
+
+    Unfused (the XLA composition): two tiled GEMMs each write their
+    (m, d_ff) result, and the gate product reads both and writes a
+    third — three full (m, d_ff) round-trips beyond the fused path.
+    Fused (kernels.matmul.gated_matmul_tiled): one A stream feeds both
+    weight operands and only the gated product is written
+    (core.blocking.gated_traffic_bytes). The down-projection GEMM is
+    identical in both and included so the ratio is per MLP *call*.
+    """
+    if cfg_hidden is None:
+        cfg_hidden = blocking.choose_block_config(
+            m, d_ff, d_model, itemsize, chip=chip, n_rhs=2 if fused else 1)
+    if cfg_down is None:
+        cfg_down = blocking.choose_block_config(
+            m, d_model, d_ff, itemsize, chip=chip)
+    if fused:
+        hidden = blocking.gated_traffic_bytes(
+            m, d_ff, d_model, cfg_hidden, itemsize)
+    else:
+        one = blocking.hbm_traffic_bytes(m, d_ff, d_model, cfg_hidden,
+                                         itemsize)
+        ew = 3 * m * d_ff * itemsize    # read gate, read up, write product
+        hidden = 2 * one + ew
+    down = blocking.hbm_traffic_bytes(m, d_model, d_ff, cfg_down, itemsize)
+    return {
+        "hidden_bytes": hidden,
+        "down_bytes": down,
+        "total_bytes": hidden + down,
+        "cfg_hidden": cfg_hidden,
+        "cfg_down": cfg_down,
+    }
+
+
+def gated_mlp_savings(m: int, d_model: int, d_ff: int,
+                      itemsize: int,
+                      chip: hw.ChipSpec = hw.DEFAULT_CHIP) -> dict:
+    """Fractional HBM-byte saving of the fused SwiGLU MLP — the number
+    benchmarks/bench_fused_epilogue.py asserts (>= 40% at its shape)."""
+    unfused = gated_mlp_traffic(m, d_model, d_ff, itemsize, fused=False,
+                                chip=chip)
+    fused = gated_mlp_traffic(m, d_model, d_ff, itemsize, fused=True,
+                              chip=chip)
+    saved = 1.0 - fused["total_bytes"] / unfused["total_bytes"]
+    return {"unfused_bytes": unfused["total_bytes"],
+            "fused_bytes": fused["total_bytes"],
+            "saved_frac": saved,
+            "unfused": unfused, "fused": fused}
 
 
 @dataclasses.dataclass

@@ -11,19 +11,22 @@ autotuner sits above kernels.ops and is loaded lazily here so that
 """
 
 from repro.tuning.cache import (CACHE_ENV_VAR, TuningCache,
-                                default_cache_path, flash_key, get_cache,
-                                matmul_key, reset_cache, set_cache)
-from repro.tuning.space import flash_candidates, matmul_candidates
+                                default_cache_path, flash_key, gated_key,
+                                get_cache, matmul_key, reset_cache,
+                                set_cache)
+from repro.tuning.space import (flash_candidates, gated_matmul_candidates,
+                                matmul_candidates)
 from repro.tuning.timing import time_jax
 
 _LAZY = ("TuneResult", "default_exec_backend", "describe_warm_start",
-         "model_gemm_shapes", "tune_flash_attention", "tune_matmul",
-         "warm_start")
+         "model_gemm_shapes", "tune_flash_attention", "tune_gated_matmul",
+         "tune_matmul", "warm_start")
 
 __all__ = [
     "CACHE_ENV_VAR", "TuningCache", "default_cache_path", "flash_key",
-    "get_cache", "matmul_key", "reset_cache", "set_cache",
-    "flash_candidates", "matmul_candidates", "time_jax", *_LAZY,
+    "gated_key", "get_cache", "matmul_key", "reset_cache", "set_cache",
+    "flash_candidates", "gated_matmul_candidates", "matmul_candidates",
+    "time_jax", *_LAZY,
 ]
 
 

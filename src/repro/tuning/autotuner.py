@@ -73,7 +73,92 @@ def _timing_meta(best_s: float, baseline_s: float) -> dict:
     return meta
 
 
+def _sweep(op: str, desc: str, candidates, time_one, put_winner,
+           cache: TuningCache, save: bool, backend: str) -> TuneResult:
+    """Shared sweep skeleton for every tune_* entry point: time each
+    candidate (an infeasible one scores inf and can never win), pick
+    the winner against the static-chooser baseline (always candidate
+    #0), persist it via put_winner, and package the TuneResult."""
+    trials = []
+    for cfg in candidates:
+        try:
+            t = time_one(cfg)
+        except Exception:  # infeasible on this backend: never the winner
+            t = float("inf")
+        trials.append((cfg, t))
+
+    baseline_cfg, baseline_s = trials[0]
+    best_cfg, best_s = min(trials, key=lambda ct: ct[1])
+    if not math.isfinite(best_s):
+        raise RuntimeError(
+            f"all {len(trials)} tile candidates failed for "
+            f"{desc} on {backend}")
+    key = put_winner(best_cfg, _timing_meta(best_s, baseline_s))
+    if save:
+        cache.save()
+    return TuneResult(op, key, backend, best_cfg, best_s,
+                      baseline_cfg, baseline_s, tuple(trials))
+
+
 def tune_matmul(
+    m: int,
+    n: int,
+    k: int,
+    dtype="float32",
+    *,
+    epilogue: str = "none",
+    backend: str | None = None,
+    cache: TuningCache | None = None,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    warmup: int = 1,
+    iters: int = 3,
+    max_candidates: int | None = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """Sweep tile configs for one GEMM shape and cache the winner.
+
+    `epilogue` times the fused-flush variant (bias / bias_gelu /
+    bias_silu / residual) with synthetic epilogue operands — the extra
+    operand DMA and VPU work shift the optimum, so each variant gets
+    its own cache entry (tuning.cache.matmul_key)."""
+    backend = backend or default_exec_backend()
+    cache = cache or get_cache()
+    interpret = backend.endswith("interpret")
+    rng = np.random.default_rng(seed)
+    if np.dtype(dtype) == np.complex64:
+        raise ValueError("tune the underlying real GEMMs (core.gemm "
+                         "decomposes complex64 into 3 f32 GEMMs)")
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    itemsize = jnp.dtype(dtype).itemsize
+    # epilogue operands ride the args tuple, NOT a closure: _timer jits
+    # with real arguments so the operand DMA being tuned for is timed,
+    # not constant-folded (see _timer's methodology note).
+    ep_name = None
+    args = (a, b)
+    if epilogue == "residual":
+        ep_name = "residual"
+        args += (jnp.asarray(rng.normal(size=(m, n)), dtype),)
+    elif epilogue != "none":
+        ep_name = "bias"
+        args += (jnp.asarray(rng.normal(size=(n,)), dtype),)
+
+    return _sweep(
+        "matmul",
+        f"matmul {m}x{n}x{k} {np.dtype(dtype).name} epilogue={epilogue}",
+        _space.matmul_candidates(m, n, k, itemsize, chip=chip,
+                                 max_candidates=max_candidates),
+        lambda cfg: _timer(lambda x, y, *e, c=cfg: _ops.matmul(
+            x, y, backend=backend, block=c, chip=chip, epilogue=epilogue,
+            **({ep_name: e[0]} if ep_name else {})),
+            args, interpret, warmup, iters),
+        lambda cfg, meta: cache.put_matmul(m, n, k, dtype, backend, cfg,
+                                           epilogue=epilogue, **meta),
+        cache, save, backend)
+
+
+def tune_gated_matmul(
     m: int,
     n: int,
     k: int,
@@ -88,41 +173,28 @@ def tune_matmul(
     save: bool = True,
     seed: int = 0,
 ) -> TuneResult:
-    """Sweep tile configs for one GEMM shape and cache the winner."""
+    """Sweep tiles for the dual-GEMM SwiGLU kernel and cache the winner
+    (the doubled B-side working set makes its optimum distinct from the
+    plain GEMM's)."""
     backend = backend or default_exec_backend()
     cache = cache or get_cache()
     interpret = backend.endswith("interpret")
     rng = np.random.default_rng(seed)
-    if np.dtype(dtype) == np.complex64:
-        raise ValueError("tune the underlying real GEMMs (core.gemm "
-                         "decomposes complex64 into 3 f32 GEMMs)")
     a = jnp.asarray(rng.normal(size=(m, k)), dtype)
-    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    wg = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    wu = jnp.asarray(rng.normal(size=(k, n)), dtype)
     itemsize = jnp.dtype(dtype).itemsize
 
-    trials = []
-    for cfg in _space.matmul_candidates(
-            m, n, k, itemsize, chip=chip, max_candidates=max_candidates):
-        try:
-            t = _timer(lambda x, y, c=cfg: _ops.matmul(
-                x, y, backend=backend, block=c, chip=chip),
-                (a, b), interpret, warmup, iters)
-        except Exception:  # infeasible on this backend: never the winner
-            t = float("inf")
-        trials.append((cfg, t))
-
-    baseline_cfg, baseline_s = trials[0]     # static chooser is always first
-    best_cfg, best_s = min(trials, key=lambda ct: ct[1])
-    if not math.isfinite(best_s):
-        raise RuntimeError(
-            f"all {len(trials)} tile candidates failed for "
-            f"matmul {m}x{n}x{k} {np.dtype(dtype).name} on {backend}")
-    key = cache.put_matmul(m, n, k, dtype, backend, best_cfg,
-                           **_timing_meta(best_s, baseline_s))
-    if save:
-        cache.save()
-    return TuneResult("matmul", key, backend, best_cfg, best_s,
-                      baseline_cfg, baseline_s, tuple(trials))
+    return _sweep(
+        "gated", f"gated {m}x{n}x{k} {np.dtype(dtype).name}",
+        _space.gated_matmul_candidates(m, n, k, itemsize, chip=chip,
+                                       max_candidates=max_candidates),
+        lambda cfg: _timer(lambda x, g, u, c=cfg: _ops.gated_matmul(
+            x, g, u, backend=backend, block=c, chip=chip),
+            (a, wg, wu), interpret, warmup, iters),
+        lambda cfg, meta: cache.put_gated(m, n, k, dtype, backend, cfg,
+                                          **meta),
+        cache, save, backend)
 
 
 def tune_flash_attention(
@@ -151,59 +223,61 @@ def tune_flash_attention(
     kv = jnp.asarray(rng.normal(size=(1, tk, heads, d)), dtype)
     itemsize = jnp.dtype(dtype).itemsize
 
-    trials = []
-    for cfg in _space.flash_candidates(
-            tq, tk, d, itemsize, chip=chip, max_candidates=max_candidates):
-        try:
-            t = _timer(lambda x, y, c=cfg: _ops.flash_attention(
-                x, y, y, causal=causal, backend=backend, block=c),
-                (q, kv), interpret, warmup, iters)
-        except Exception:
-            t = float("inf")
-        trials.append((cfg, t))
-
-    baseline_cfg, baseline_s = trials[0]
-    best_cfg, best_s = min(trials, key=lambda ct: ct[1])
-    if not math.isfinite(best_s):
-        raise RuntimeError(
-            f"all {len(trials)} tile candidates failed for "
-            f"flash {tq}x{tk}xd{d} {np.dtype(dtype).name} on {backend}")
-    key = cache.put_flash(tq, tk, d, dtype, backend, best_cfg,
-                          **_timing_meta(best_s, baseline_s))
-    if save:
-        cache.save()
-    return TuneResult("flash", key, backend, best_cfg, best_s,
-                      baseline_cfg, baseline_s, tuple(trials))
+    return _sweep(
+        "flash", f"flash {tq}x{tk}xd{d} {np.dtype(dtype).name}",
+        _space.flash_candidates(tq, tk, d, itemsize, chip=chip,
+                                max_candidates=max_candidates),
+        lambda cfg: _timer(lambda x, y, c=cfg: _ops.flash_attention(
+            x, y, y, causal=causal, backend=backend, block=c),
+            (q, kv), interpret, warmup, iters),
+        lambda cfg, meta: cache.put_flash(tq, tk, d, dtype, backend, cfg,
+                                          **meta),
+        cache, save, backend)
 
 
 def model_gemm_shapes(cfg, batch: int, seq: int,
-                      backward: bool = False) -> list[tuple[int, int, int]]:
-    """The dense-contraction shapes a (batch, seq) step of `cfg` pushes
-    through the core.gemm chokepoint: attention projections, FFN up /
-    down, and the logits GEMM (at the PADDED vocab — the lm_head the
-    model actually allocates). Deduplicated (m, n, k) triples.
+                      backward: bool = False) -> list[tuple]:
+    """The dense contractions a (batch, seq) step of `cfg` pushes
+    through the core.gemm chokepoint, as deduplicated
+    ``(op, m, n, k, epilogue)`` entries — op "matmul" (epilogue-variant
+    GEMM) or "gated" (the dual-GEMM SwiGLU kernel, epilogue "-").
+    Covers attention projections, the FFN (fused: gated hidden +
+    residual/bias down-projection, per cfg.mlp), and the logits GEMM at
+    the PADDED vocab — the lm_head the model actually allocates.
 
     backward=True adds the custom-VJP cotangent GEMMs per forward
-    shape: da = g @ w.T is (m, k, n) and dw = x.T @ g is (k, n, m) —
-    without these, a tuned training run would only serve the forward
-    third of its GEMM flops from the cache.
+    shape: da = g @ w.T is (m, k, n) and dw = x.T @ g is (k, n, m),
+    plus the plain recompute GEMMs the fused paths' backward passes
+    route through the chokepoint — without these, a tuned training run
+    would only serve the forward third of its GEMM flops from the cache.
     """
     m = batch * seq
     head_dim = getattr(cfg, "resolved_head_dim",
                        cfg.head_dim or cfg.d_model // cfg.n_heads)
     vocab = getattr(cfg, "padded_vocab", cfg.vocab)
-    shapes = {
-        (m, cfg.n_heads * head_dim, cfg.d_model),          # Q proj
-        (m, cfg.n_kv_heads * head_dim, cfg.d_model),       # K/V proj
-        (m, cfg.d_model, cfg.n_heads * head_dim),          # O proj
-        (m, cfg.d_ff, cfg.d_model),                        # FFN up/gate
-        (m, cfg.d_model, cfg.d_ff),                        # FFN down
-        (m, vocab, cfg.d_model),                           # logits
+    qkv_ep = "bias" if getattr(cfg, "qkv_bias", False) else "none"
+    entries = {
+        ("matmul", m, cfg.n_heads * head_dim, cfg.d_model, qkv_ep),    # Q
+        ("matmul", m, cfg.n_kv_heads * head_dim, cfg.d_model, qkv_ep),  # K/V
+        ("matmul", m, cfg.d_model, cfg.n_heads * head_dim, "none"),    # O
+        ("matmul", m, vocab, cfg.d_model, "none"),                     # logits
     }
+    if getattr(cfg, "mlp", "swiglu") == "swiglu":
+        entries.add(("gated", m, cfg.d_ff, cfg.d_model, "-"))
+        entries.add(("matmul", m, cfg.d_model, cfg.d_ff, "residual"))
+    else:  # gelu MLP: bias+act fused up, bias fused down (+residual xla)
+        entries.add(("matmul", m, cfg.d_ff, cfg.d_model, "bias_gelu"))
+        entries.add(("matmul", m, cfg.d_model, cfg.d_ff, "bias"))
     if backward:
-        shapes |= {t for (mm, nn, kk) in tuple(shapes)
-                   for t in ((mm, kk, nn), (kk, nn, mm))}
-    return sorted(shapes)
+        # fused backward passes recompute/differentiate through plain
+        # GEMMs: each forward (m, n, k) contributes its unfused triple
+        # and both cotangent triples, all epilogue-free.
+        fwd = {(mm, nn, kk) for (_, mm, nn, kk, _) in entries}
+        entries |= {("matmul", mm, nn, kk, "none")
+                    for t in fwd
+                    for (mm, nn, kk) in (t, (t[0], t[2], t[1]),
+                                         (t[2], t[1], t[0]))}
+    return sorted(entries)
 
 
 def warm_start(
@@ -237,19 +311,31 @@ def warm_start(
                      for s in model_gemm_shapes(cfg, batch, q,
                                                 backward=backward)})
     hits, misses, tuned, failed = [], [], [], []
-    for (m, n, k) in shapes:
-        if cache.get_matmul(m, n, k, dtype, backend) is not None:
-            hits.append((m, n, k))
+    for entry in shapes:
+        op, m, n, k, ep = entry
+        if op == "gated":
+            hit = cache.get_gated(m, n, k, dtype, backend) is not None
+        else:
+            hit = cache.get_matmul(m, n, k, dtype, backend,
+                                   epilogue=ep) is not None
+        if hit:
+            hits.append(entry)
         elif autotune:
             try:
-                tune_matmul(m, n, k, dtype, backend=backend, cache=cache,
-                            iters=iters, max_candidates=max_candidates,
-                            save=False)
-                tuned.append((m, n, k))
+                if op == "gated":
+                    tune_gated_matmul(m, n, k, dtype, backend=backend,
+                                      cache=cache, iters=iters,
+                                      max_candidates=max_candidates,
+                                      save=False)
+                else:
+                    tune_matmul(m, n, k, dtype, epilogue=ep,
+                                backend=backend, cache=cache, iters=iters,
+                                max_candidates=max_candidates, save=False)
+                tuned.append(entry)
             except RuntimeError:  # every candidate failed: use fallback
-                failed.append((m, n, k))
+                failed.append(entry)
         else:
-            misses.append((m, n, k))
+            misses.append(entry)
     if tuned:
         cache.save()
     return {

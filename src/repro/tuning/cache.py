@@ -51,8 +51,21 @@ def default_cache_path() -> str:
     return os.path.expanduser(os.environ.get(CACHE_ENV_VAR, DEFAULT_CACHE_PATH))
 
 
-def matmul_key(m: int, n: int, k: int, dtype, backend: str) -> str:
-    return f"matmul|{m}x{n}x{k}|{np.dtype(dtype).name}|{backend}"
+def matmul_key(m: int, n: int, k: int, dtype, backend: str,
+               epilogue: str = "none") -> str:
+    """Fused-epilogue variants are keyed separately: the extra flush-
+    phase operand DMA and VPU work shift the optimal tile, so a winner
+    tuned for the plain GEMM must not be served to e.g. bias_silu.
+    epilogue="none" keeps the historical key so old caches stay valid."""
+    key = f"matmul|{m}x{n}x{k}|{np.dtype(dtype).name}|{backend}"
+    if epilogue not in (None, "none"):
+        key += f"|{epilogue}"
+    return key
+
+
+def gated_key(m: int, n: int, k: int, dtype, backend: str) -> str:
+    """The dual-GEMM SwiGLU kernel: (m, k) x 2*(k, n) -> (m, n)."""
+    return f"gated|{m}x{n}x{k}|{np.dtype(dtype).name}|{backend}"
 
 
 def flash_key(tq: int, tk: int, d: int, dtype, backend: str) -> str:
@@ -134,16 +147,31 @@ class TuningCache:
         self._entries[key] = dict(entry)
 
     # --- typed accessors -------------------------------------------------
-    def get_matmul(self, m: int, n: int, k: int, dtype,
-                   backend: str) -> Optional[BlockConfig]:
-        e = self.get(matmul_key(m, n, k, dtype, backend))
+    def get_matmul(self, m: int, n: int, k: int, dtype, backend: str,
+                   epilogue: str = "none") -> Optional[BlockConfig]:
+        e = self.get(matmul_key(m, n, k, dtype, backend, epilogue))
         if e is None:
             return None
         return BlockConfig(bm=int(e["bm"]), bn=int(e["bn"]), bk=int(e["bk"]))
 
     def put_matmul(self, m: int, n: int, k: int, dtype, backend: str,
-                   cfg: BlockConfig, **meta: Any) -> str:
-        key = matmul_key(m, n, k, dtype, backend)
+                   cfg: BlockConfig, *, epilogue: str = "none",
+                   **meta: Any) -> str:
+        key = matmul_key(m, n, k, dtype, backend, epilogue)
+        self.put(key, {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk,
+                       "tuned_at": _now(), **meta})
+        return key
+
+    def get_gated(self, m: int, n: int, k: int, dtype,
+                  backend: str) -> Optional[BlockConfig]:
+        e = self.get(gated_key(m, n, k, dtype, backend))
+        if e is None:
+            return None
+        return BlockConfig(bm=int(e["bm"]), bn=int(e["bn"]), bk=int(e["bk"]))
+
+    def put_gated(self, m: int, n: int, k: int, dtype, backend: str,
+                  cfg: BlockConfig, **meta: Any) -> str:
+        key = gated_key(m, n, k, dtype, backend)
         self.put(key, {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk,
                        "tuned_at": _now(), **meta})
         return key

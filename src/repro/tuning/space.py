@@ -31,6 +31,7 @@ def matmul_candidates(
     chip: hw.ChipSpec = hw.DEFAULT_CHIP,
     vmem_fraction: float = 0.5,
     max_candidates: int | None = None,
+    n_rhs: int = 1,
 ) -> list[BlockConfig]:
     """Feasible (bm, bn, bk) tiles for an (m, k) x (k, n) GEMM.
 
@@ -38,13 +39,18 @@ def matmul_candidates(
     order always has the fallback as its baseline. Tile dims larger than
     the (padded) problem are clamped, which collapses many grid points —
     duplicates are dropped.
+
+    n_rhs=2 sizes the space for the fused dual-GEMM (gated) kernel:
+    double B-side tiles and accumulators shrink the feasible set, and
+    the default comes from the n_rhs-aware static chooser.
     """
     budget = int(chip.vmem_bytes * vmem_fraction)
     sub = chip.sublane(itemsize)
     lane = chip.lane
 
     default = blocking.choose_block_config(
-        m, n, k, itemsize, chip=chip, vmem_fraction=vmem_fraction)
+        m, n, k, itemsize, chip=chip, vmem_fraction=vmem_fraction,
+        n_rhs=n_rhs)
     out = [default]
     seen = {(default.bm, default.bn, default.bk)}
     for bm in _BM:
@@ -55,7 +61,8 @@ def matmul_candidates(
                 bk = min(bk, _round_up(k, lane))
                 cfg = BlockConfig(bm, bn, bk)
                 key = (bm, bn, bk)
-                if key in seen or cfg.vmem_bytes(itemsize) > budget:
+                if key in seen or \
+                        cfg.vmem_bytes(itemsize, n_rhs=n_rhs) > budget:
                     continue
                 seen.add(key)
                 out.append(cfg)
@@ -63,9 +70,25 @@ def matmul_candidates(
         # Keep the default plus the highest-AI survivors: AI is the
         # paper's own proxy for which tiles can be compute-bound.
         rest = sorted(out[1:],
-                      key=lambda c: -c.arithmetic_intensity(itemsize))
+                      key=lambda c: -c.arithmetic_intensity(itemsize, n_rhs))
         out = out[:1] + rest[:max(0, max_candidates - 1)]
     return out
+
+
+def gated_matmul_candidates(
+    m: int,
+    n: int,
+    k: int,
+    itemsize: int,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+    max_candidates: int | None = None,
+) -> list[BlockConfig]:
+    """Feasible tiles for the dual-GEMM SwiGLU kernel ((m, k) staged
+    against two (k, n) operands) — matmul_candidates with n_rhs=2."""
+    return matmul_candidates(m, n, k, itemsize, chip=chip,
+                             vmem_fraction=vmem_fraction,
+                             max_candidates=max_candidates, n_rhs=2)
 
 
 def flash_candidates(

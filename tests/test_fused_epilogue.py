@@ -1,0 +1,276 @@
+"""Fused-epilogue / dual-GEMM coverage: forward parity vs the unfused
+XLA composition (bf16/f32, padded odd shapes), VJP parity vs jax.grad
+of the reference, f64/complex routing back to the unfused path through
+core.gemm, the epilogue-keyed tuner cache, and the matmul_tiled clamp
+re-validation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gemm
+from repro.core.blocking import BlockConfig
+from repro.kernels import ops
+from repro.kernels.matmul import EPILOGUES, matmul_tiled
+from repro.kernels.ref import epilogue_ref, gated_matmul_ref, matmul_ref
+from repro.tuning import cache as tcache
+
+SHAPES = [
+    (128, 128, 128),
+    (100, 130, 50),      # ragged: exercises padding of every operand
+    (256, 384, 512),
+]
+
+
+def _tol(dtype):
+    return 1e-5 if dtype == "float32" else 2e-2
+
+
+def _operands(rng, m, n, k, dtype):
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    bias = jnp.asarray(rng.normal(size=(n,)), dtype)
+    r = jnp.asarray(rng.normal(size=(m, n)), dtype)
+    return a, b, bias, r
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("epilogue", EPILOGUES)
+def test_epilogue_matches_unfused(rng, m, n, k, dtype, epilogue):
+    a, b, bias, r = _operands(rng, m, n, k, dtype)
+    kw = {}
+    if epilogue == "residual":
+        kw["residual"] = r
+    elif epilogue != "none":
+        kw["bias"] = bias
+    out = ops.matmul(a, b, backend="pallas_interpret", epilogue=epilogue,
+                     **kw)
+    ref = epilogue_ref(matmul_ref(a, b, out_dtype=jnp.float32), epilogue,
+                       kw.get("bias"), kw.get("residual"))
+    tol = _tol(dtype)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol * 8)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_gated_matches_unfused(rng, m, n, k, dtype):
+    a, wg, _, _ = _operands(rng, m, n, k, dtype)
+    wu = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    out = ops.gated_matmul(a, wg, wu, backend="pallas_interpret")
+    ref = gated_matmul_ref(a, wg, wu, out_dtype=jnp.float32)
+    tol = _tol(dtype)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol * 8)
+
+
+def test_dense_activation_forward_and_vjp(rng):
+    x = jnp.asarray(rng.normal(size=(48, 40)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(40, 56)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(56,)), jnp.float32)
+
+    for act, f in (("gelu", jax.nn.gelu), ("silu", jax.nn.silu)):
+        out = gemm.dense(x, w, b, activation=act,
+                         backend="pallas_interpret")
+        ref = f(x @ w + b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4)
+
+        def loss(x_, w_, b_):
+            return jnp.sum(gemm.dense(x_, w_, b_, activation=act,
+                                      backend="pallas_interpret") ** 2)
+
+        grads = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+        refs = jax.grad(
+            lambda x_, w_, b_, f=f: jnp.sum(f(x_ @ w_ + b_) ** 2),
+            argnums=(0, 1, 2))(x, w, b)
+        for g, r in zip(grads, refs):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                       rtol=1e-4, atol=1e-3, err_msg=act)
+
+
+def test_dense_residual_forward_and_vjp(rng):
+    x = jnp.asarray(rng.normal(size=(32, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 48)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+    out = gemm.dense(x, w, residual=r, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w + r),
+                               rtol=1e-5, atol=1e-4)
+
+    def loss(x_, w_, r_):
+        return jnp.sum(gemm.dense(x_, w_, residual=r_,
+                                  backend="pallas_interpret") ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(x, w, r)
+    refs = jax.grad(lambda x_, w_, r_: jnp.sum((x_ @ w_ + r_) ** 2),
+                    argnums=(0, 1, 2))(x, w, r)
+    for g, ref in zip(grads, refs):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_dense_broadcast_residual_matches_xla(rng):
+    """A residual that broadcasts but is not (m, n) cannot ride the
+    fused flush — it must be added unfused, matching the xla backend."""
+    x = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 24)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(1, 24)), jnp.float32)
+    fused = gemm.dense(x, w, residual=r, backend="pallas_interpret")
+    ref = gemm.dense(x, w, residual=r, backend="xla")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gated_mlp_vjp_and_batched(rng):
+    x = jnp.asarray(rng.normal(size=(3, 16, 24)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(24, 32)), jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(24, 32)), jnp.float32)
+
+    out = gemm.gated_mlp(x, wg, wu, backend="pallas_interpret")
+    ref = jax.nn.silu(x @ wg) * (x @ wu)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+    def loss(x_, g_, u_):
+        return jnp.sum(gemm.gated_mlp(x_, g_, u_,
+                                      backend="pallas_interpret") ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(x, wg, wu)
+    refs = jax.grad(
+        lambda x_, g_, u_: jnp.sum((jax.nn.silu(x_ @ g_) * (x_ @ u_)) ** 2),
+        argnums=(0, 1, 2))(x, wg, wu)
+    for g, r in zip(grads, refs):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-4, atol=1e-3)
+
+    # MoE-style expert banks: batched weights vmapped over the 2D path
+    xb = jnp.asarray(rng.normal(size=(4, 8, 24)), jnp.float32)
+    gb = jnp.asarray(rng.normal(size=(4, 24, 16)), jnp.float32)
+    ub = jnp.asarray(rng.normal(size=(4, 24, 16)), jnp.float32)
+    outb = gemm.gated_mlp(xb, gb, ub, backend="pallas_interpret")
+    refb = jax.nn.silu(xb @ gb) * (xb @ ub)
+    np.testing.assert_allclose(np.asarray(outb), np.asarray(refb),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_complex_falls_back_to_unfused(rng, monkeypatch):
+    """complex64 must never reach the fused kernels: core.gemm routes it
+    through the unfused composition (complex decomposition inside the
+    plain chokepoint)."""
+    def boom(*a, **kw):  # pragma: no cover - failure path
+        raise AssertionError("fused kernel called with complex input")
+    monkeypatch.setattr(ops, "gated_matmul", boom)
+    a = jnp.asarray(rng.normal(size=(16, 12))
+                    + 1j * rng.normal(size=(16, 12)), jnp.complex64)
+    wg = jnp.asarray(rng.normal(size=(12, 8))
+                     + 1j * rng.normal(size=(12, 8)), jnp.complex64)
+    wu = jnp.asarray(rng.normal(size=(12, 8))
+                     + 1j * rng.normal(size=(12, 8)), jnp.complex64)
+    out = gemm.gated_mlp(a, wg, wu, backend="pallas_interpret")
+    ref = jax.nn.silu(a @ wg) * (a @ wu)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    # dense bias epilogue likewise stays unfused for complex
+    b = jnp.asarray(rng.normal(size=(8,)), jnp.complex64)
+    out = gemm.dense(a, wg, b, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ wg + b),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_f64_routes_unfused():
+    """f64 has no MXU path: the fusibility gate must exclude it (the
+    interpret-mode f64 end-to-end run lives in test_kernels_matmul's
+    x64 subprocess)."""
+    assert not gemm._fusible(jnp.float64, "pallas")
+    assert not gemm._fusible(jnp.float64, "pallas_interpret")
+    assert not gemm._fusible(jnp.complex64, "tuned")
+    assert gemm._fusible(jnp.float32, "pallas_interpret")
+    assert gemm._fusible(jnp.bfloat16, "tuned")
+    assert not gemm._fusible(jnp.float32, "xla")
+    assert not gemm._fusible(jnp.float32, "naive")
+
+
+def test_clamped_block_revalidates():
+    """The old min(bm, m) clamp silently rewrote served configs; now a
+    clamp that breaks divisibility is a clear ValueError."""
+    a = jnp.zeros((100, 64), jnp.float32)
+    b = jnp.zeros((64, 64), jnp.float32)
+    with pytest.raises(ValueError, match="does not divide"):
+        matmul_tiled(a, b, bm=64, bn=64, bk=64, interpret=True)
+
+
+def test_bad_cached_block_falls_back(tmp_path, monkeypatch, rng):
+    """A degenerate autotuner entry (corrupt cache) must fall back to
+    the static chooser instead of crashing the tuned backend."""
+    path = str(tmp_path / "tuning.json")
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, path)
+    tcache.reset_cache()
+    c = tcache.get_cache()
+    c.put_matmul(96, 96, 96, "float32", "pallas_interpret",
+                 BlockConfig(0, 128, 128))
+    c.put_gated(96, 96, 96, "float32", "pallas_interpret",
+                BlockConfig(0, 128, 128))
+    c.save()
+    a = jnp.asarray(rng.normal(size=(96, 96)), jnp.float32)
+    out = ops.matmul(a, a, backend="tuned_interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, a)),
+                               rtol=1e-4, atol=1e-3)
+    out = ops.gated_matmul(a, a, a, backend="tuned_interpret")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gated_matmul_ref(a, a, a)),
+                               rtol=1e-4, atol=1e-3)
+    tcache.reset_cache()
+
+
+def test_tuned_serves_epilogue_and_gated_keys(tmp_path, monkeypatch, rng):
+    """Epilogue variants and the gated kernel have their own cache keys;
+    a planted non-default config must be served (hit counter) and stay
+    correct."""
+    path = str(tmp_path / "tuning.json")
+    monkeypatch.setenv(tcache.CACHE_ENV_VAR, path)
+    tcache.reset_cache()
+    c = tcache.get_cache()
+    c.put_matmul(128, 128, 128, "float32", "pallas_interpret",
+                 BlockConfig(64, 128, 128), epilogue="bias_silu")
+    c.put_gated(128, 128, 128, "float32", "pallas_interpret",
+                BlockConfig(64, 128, 128))
+    c.save()
+    a = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+
+    hits0 = c.hits
+    out = ops.matmul(a, a, backend="tuned_interpret", epilogue="bias_silu",
+                     bias=bias)
+    assert c.hits == hits0 + 1
+    ref = epilogue_ref(matmul_ref(a, a), "bias_silu", bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    # the epilogue key is distinct from the plain GEMM key
+    assert c.get_matmul(128, 128, 128, "float32", "pallas_interpret") is None
+
+    hits0 = c.hits
+    out = ops.gated_matmul(a, a, a, backend="tuned_interpret")
+    assert c.hits == hits0 + 1
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gated_matmul_ref(a, a, a)),
+                               rtol=1e-4, atol=1e-3)
+    tcache.reset_cache()
+
+
+def test_model_gemm_shapes_cover_fused_ops():
+    from repro.configs import get_config
+    from repro.tuning import autotuner
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    entries = autotuner.model_gemm_shapes(cfg, 2, 16)
+    ops_seen = {e[0] for e in entries}
+    assert "gated" in ops_seen          # SwiGLU FFN is served fused
+    assert any(e[0] == "matmul" and e[4] == "residual" for e in entries)
+    bwd = autotuner.model_gemm_shapes(cfg, 2, 16, backward=True)
+    assert len(bwd) > len(entries)
+    # cotangent GEMMs are plain (the fused VJPs recurse unfused)
+    assert all(e[4] == "none" for e in set(bwd) - set(entries)
+               if e[0] == "matmul")
