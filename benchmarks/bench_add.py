@@ -15,7 +15,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_jax
 from repro.core import hw, intensity
+from repro.core.policy import Policy
 from repro.kernels import ops
+
+_PI = Policy.from_backend("pallas_interpret")
 
 
 def run() -> None:
@@ -45,7 +48,7 @@ def run() -> None:
     # interpret-mode kernel twin (correctness; not wall-clock)
     s = 1024
     x = jnp.asarray(rng.normal(size=(s, s)), jnp.float32)
-    t = time_jax(lambda p, q: ops.add(p, q, backend="pallas_interpret"),
+    t = time_jax(lambda p, q: ops.add(p, q, policy=_PI),
                  x, x, warmup=1, iters=2)
     emit(f"add_pallas_interpret_{s}", t, "interpreter")
 

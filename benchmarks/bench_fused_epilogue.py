@@ -35,7 +35,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_jax
 from repro.core import blocking, gemm
+from repro.core.policy import Policy
 from repro.kernels import ops
+
+_PI = Policy.from_backend("pallas_interpret")
 from repro.roofline import analysis
 
 # The byte-accounting assertion shape: skinny d_model vs wide d_ff makes
@@ -73,10 +76,10 @@ def _token_exactness(rng) -> None:
     wg = jnp.asarray(rng.normal(size=(D, F)), jnp.float32)
     wu = jnp.asarray(rng.normal(size=(D, F)), jnp.float32)
     cfg = blocking.choose_block_config(M, F, D, 4, n_rhs=2)
-    fused = ops.gated_matmul(a, wg, wu, backend="pallas_interpret",
+    fused = ops.gated_matmul(a, wg, wu, policy=_PI,
                              block=cfg)
-    g = ops.matmul(a, wg, backend="pallas_interpret", block=cfg)
-    u = ops.matmul(a, wu, backend="pallas_interpret", block=cfg)
+    g = ops.matmul(a, wg, policy=_PI, block=cfg)
+    u = ops.matmul(a, wu, policy=_PI, block=cfg)
     unfused = jax.nn.silu(g) * u
     exact = bool(jnp.all(fused == unfused))
     emit("fused_swiglu_token_exact_f32", 0.0,
@@ -92,7 +95,7 @@ def _vjp_parity(rng) -> None:
 
     def fused_loss(x, g_, u_):
         return jnp.sum(gemm.gated_mlp(
-            x, g_, u_, backend="pallas_interpret") ** 2)
+            x, g_, u_, policy=_PI) ** 2)
 
     def ref_loss(x, g_, u_):
         return jnp.sum((jax.nn.silu(x @ g_) * (x @ u_)) ** 2)
@@ -115,16 +118,16 @@ def _interpret_timings(rng) -> None:
     bias = jnp.asarray(rng.normal(size=(F,)), jnp.float32)
 
     t = time_jax(lambda x: ops.gated_matmul(
-        x, wg, wu, backend="pallas_interpret"), a, warmup=1, iters=2)
+        x, wg, wu, policy=_PI), a, warmup=1, iters=2)
     emit("gated_matmul_pallas_interpret", t, "1-kernel-pass")
     t = time_jax(
         lambda x: jax.nn.silu(
-            ops.matmul(x, wg, backend="pallas_interpret"))
-        * ops.matmul(x, wu, backend="pallas_interpret"),
+            ops.matmul(x, wg, policy=_PI))
+        * ops.matmul(x, wu, policy=_PI),
         a, warmup=1, iters=2)
     emit("gated_matmul_unfused_interpret", t, "2-kernel-passes+ew")
     t = time_jax(lambda x: ops.matmul(
-        x, wg, backend="pallas_interpret", epilogue="bias_gelu", bias=bias),
+        x, wg, policy=_PI, epilogue="bias_gelu", bias=bias),
         a, warmup=1, iters=2)
     emit("matmul_bias_gelu_fused_interpret", t,
          "interpreter-not-wallclock-meaningful")

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_jax
 from repro import tuning
 from repro.core import blocking, gemm, hw, precision
+from repro.core.policy import Policy
 from repro.configs.paper_gemm import CONFIG as PAPER
 
 # Shapes the interpret-mode autotune sweep covers on this container.
@@ -45,11 +46,12 @@ def modeled_time(chip, n, itemsize, shared: bool) -> float:
     return blocking.gemm_time_model(n, n, n, itemsize, cfg, chip=chip)["t_total"]
 
 
-def _autotune_sweep(backend: str) -> None:
+def _autotune_sweep(policy: Policy) -> None:
     """Populate the tuning cache for the shapes this suite measures and
     report tuned-vs-default tile timings."""
+    backend = policy.kernel_fingerprint           # emit-label component
     for n in TUNE_SIZES:
-        res = tuning.tune_matmul(n, n, n, "float32", backend=backend,
+        res = tuning.tune_matmul(n, n, n, "float32", policy=policy,
                                  warmup=1, iters=2, max_candidates=6)
         b = res.best
         emit(f"autotune_matmul_{backend}_{n}", res.best_s,
@@ -58,7 +60,7 @@ def _autotune_sweep(backend: str) -> None:
              f"speedup_vs_default={res.speedup:.2f}x;"
              f"trials={len(res.trials)}")
     tq, tk, d = TUNE_FLASH
-    res = tuning.tune_flash_attention(tq, tk, d, "float32", backend=backend,
+    res = tuning.tune_flash_attention(tq, tk, d, "float32", policy=policy,
                                       warmup=1, iters=2, max_candidates=4)
     emit(f"autotune_flash_{backend}_{tq}x{tk}", res.best_s,
          f"best=bq{res.best.bq}xbk{res.best.bk};"
@@ -68,24 +70,26 @@ def _autotune_sweep(backend: str) -> None:
           f"(fingerprint {cache.fingerprint})")
 
 
-def _tuned_serving_report(backend: str) -> None:
-    """Measure the `tuned` backend and say whether each shape's tiles
-    came from the autotuner cache or fell back to the static chooser."""
+def _tuned_serving_report(policy: Policy) -> None:
+    """Measure the cached-autotune policy and say whether each shape's
+    tiles came from the autotuner cache or fell back to the static
+    chooser."""
     cache = tuning.get_cache(refresh=True)
     rng = np.random.default_rng(1)
-    tuned_backend = "tuned_interpret" if backend.endswith("interpret") \
+    tuned_policy = policy.replace(autotune="cached")
+    tuned_label = "tuned_interpret" if tuned_policy.resolved_interpret \
         else "tuned"
     for n in TUNE_SIZES:
-        cfg = cache.get_matmul(n, n, n, "float32", backend)
+        cfg = cache.get_matmul(n, n, n, "float32", policy)
         a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
-        f = lambda x, y: gemm.matmul(x, y, backend=tuned_backend)
+        f = lambda x, y: gemm.matmul(x, y, policy=tuned_policy)
         t = time_jax(f, a, a, warmup=1, iters=2)
         if cfg is not None:
             derived = (f"served_from_cache=True;"
                        f"config=bm{cfg.bm}xbn{cfg.bn}xbk{cfg.bk}")
         else:
             derived = "served_from_cache=False;fallback=static-chooser"
-        emit(f"matmul_{tuned_backend}_{n}", t, derived)
+        emit(f"matmul_{tuned_label}_{n}", t, derived)
 
 
 def run(autotune: bool = False) -> None:
@@ -98,7 +102,7 @@ def run(autotune: bool = False) -> None:
             if dtype != "complex64" else jnp.asarray(
                 rng.normal(size=(n, n)) + 1j * rng.normal(size=(n, n)),
                 dtype)
-        f = jax.jit(lambda x, y: gemm.matmul(x, y, backend="xla"))
+        f = jax.jit(lambda x, y: gemm.matmul(x, y, policy=Policy()))
         t = time_jax(f, a, a, warmup=1, iters=iters)
         flops = precision.gemm_flops(n, n, n, dtype)
         emit(f"matmul_xla_cpu_{dtype}_{n}", t,
@@ -108,16 +112,17 @@ def run(autotune: bool = False) -> None:
     ni = 512
     a = jnp.asarray(rng.normal(size=(ni, ni)), jnp.float32)
     for backend in ("pallas_interpret", "naive_interpret"):
-        f = lambda x, y: gemm.matmul(x, y, backend=backend)
+        pol = Policy.from_backend(backend)
+        f = lambda x, y: gemm.matmul(x, y, policy=pol)
         t = time_jax(f, a, a, warmup=1, iters=2)
         emit(f"matmul_{backend}_{ni}", t,
              "interpreter-not-wallclock-meaningful")
 
-    # --- tile autotuning (sweep + cache) and tuned-backend serving
-    exec_backend = tuning.default_exec_backend()
+    # --- tile autotuning (sweep + cache) and cached-policy serving
+    exec_policy = tuning.default_exec_policy()
     if autotune:
-        _autotune_sweep(exec_backend)
-    _tuned_serving_report(exec_backend)
+        _autotune_sweep(exec_policy)
+    _tuned_serving_report(exec_policy)
 
     # --- modeled Table 2 (per-chip roofline), float column
     paper = PAPER.reference_times

@@ -71,6 +71,8 @@ def write_bench_json(directory: str | None = None,
     so they never clobber the harness's full-run file."""
     import jax
 
+    from repro.core import policy as _pol
+
     rev = _git_rev()
     directory = directory or os.path.dirname(
         os.path.dirname(os.path.abspath(__file__)))
@@ -82,6 +84,10 @@ def write_bench_json(directory: str | None = None,
             timespec="seconds"),
         "jax": jax.__version__,
         "platform": jax.devices()[0].platform,
+        # the ambient execution policy the run was driven under
+        # (benchmarks/run.py --backend constructs it); individual
+        # suites may still pin their own per-call policies.
+        "policy": _pol.current_policy().fingerprint(),
         "results": bench_results(),
     }
     with open(path, "w") as f:

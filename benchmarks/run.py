@@ -29,6 +29,9 @@ import argparse
 import sys
 import traceback
 
+from repro.core import policy as policy_mod
+from repro.core.policy import LEGACY_BACKEND_NAMES, Policy
+
 from benchmarks import (bench_add, bench_arch_step, bench_distributed_gemm,
                         bench_fused_epilogue, bench_matmul,
                         bench_roofline_table, bench_serving,
@@ -52,10 +55,17 @@ AUTOTUNABLE = frozenset({"matmul"})
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    ap.add_argument("--backend", choices=LEGACY_BACKEND_NAMES, default="xla",
+                    help="ambient execution Policy for the run; suites "
+                         "that sweep backends still pin their own")
     ap.add_argument("--autotune", action="store_true",
                     help="sweep tile configs via repro.tuning and persist "
                          "winners to the tuning cache")
     args = ap.parse_args()
+
+    # One typed Policy for the whole run: recorded in the BENCH json
+    # (write_bench_json) so a result is reproducible from its file.
+    policy_mod.set_default_policy(Policy.from_backend(args.backend))
 
     print("name,us_per_call,derived")
     failures = []

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_gemm import CONFIG as PAPER
+from repro.core.policy import Policy
 from repro.core import blocking, gemm, hw
 
 
@@ -42,7 +43,7 @@ def main():
                             + 1j * rng.normal(size=(n, n)), dtype)
         else:
             a = jnp.asarray(rng.normal(size=(n, n)), dtype)
-        f = jax.jit(lambda x: gemm.matmul(x, x, backend="xla"))
+        f = jax.jit(lambda x: gemm.matmul(x, x, policy=Policy()))
         t = wall(f, a)
         print(f"  {dtype:10s} {t:8.3f}s")
 

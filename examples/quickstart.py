@@ -1,5 +1,5 @@
-"""Quickstart: the paper's kernel, the GEMM chokepoint, and a tiny
-end-to-end model — in ~60 lines.
+"""Quickstart: the paper's kernel, the typed execution Policy, and a
+tiny end-to-end model — in ~60 lines, entirely on the public facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,38 +8,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.configs as C
-from repro.core import blocking, gemm
+import repro
 from repro.data.pipeline import SyntheticLM
 from repro.optim.adamw import AdamW
 from repro.training import train_loop as TL
 
 # ----------------------------------------------------------------- 1.
-# The paper's tiled GEMM (Listing 4 -> Pallas/VMEM), via the chokepoint.
+# The paper's tiled GEMM (Listing 4 -> Pallas/VMEM), selected by Policy.
 rng = np.random.default_rng(0)
 a = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
 b = jnp.asarray(rng.normal(size=(512, 384)), jnp.float32)
 
-c_ref = gemm.matmul(a, b, backend="xla")
-c_pal = gemm.matmul(a, b, backend="pallas_interpret")   # the TPU kernel
+pallas = repro.Policy(backend="pallas")   # interpret=None: auto off-TPU
+c_ref = repro.matmul(a, b)                # ambient default: plain XLA
+c_pal = repro.matmul(a, b, policy=pallas)
 print("tiled Pallas GEMM max|err| vs XLA:",
       float(jnp.max(jnp.abs(c_pal - c_ref))))
+print("policy:", pallas.fingerprint() or "xla-default",
+      "-> kernel", pallas.kernel_fingerprint)
 
-cfgb = blocking.choose_block_config(4096, 4096, 4096, 2)
-print(f"VMEM tile choice for 4096^3 bf16: {cfgb.bm}x{cfgb.bn}x{cfgb.bk} "
-      f"({cfgb.vmem_bytes(2)/2**20:.1f} MiB of 128 MiB)")
+# The same selection as an ambient scope — no per-call plumbing:
+with pallas.scope():
+    h = repro.gated_mlp(a, b[:, :256], b[:, 128:384])   # dual-GEMM SwiGLU
+print("gated_mlp under scope:", h.shape)
 
 # ----------------------------------------------------------------- 2.
 # The paper's dtype study in one call: complex GEMM through real kernels.
 ac = jnp.asarray(rng.normal(size=(64, 64)) + 1j * rng.normal(size=(64, 64)),
                  jnp.complex64)
-cc = gemm.matmul(ac, ac, backend="pallas_interpret")    # gauss3 decomposition
+cc = repro.matmul(ac, ac, policy=pallas)   # gauss3 decomposition
 print("complex64 via 3 real GEMMs max|err|:",
       float(jnp.max(jnp.abs(cc - ac @ ac))))
 
 # ----------------------------------------------------------------- 3.
 # A model whose every dense op routes through that chokepoint.
-cfg = C.get_config("qwen3-0.6b", reduced=True)
+cfg = repro.get_config("qwen3-0.6b", reduced=True)
 opt = AdamW(lr=1e-3)
 state = TL.init_state(cfg, opt, jax.random.PRNGKey(0))
 step = jax.jit(TL.make_train_step(cfg, opt), donate_argnums=(0,))

@@ -1,0 +1,89 @@
+"""Public facade for the reproduction.
+
+One import surface for the stable API:
+
+    import repro
+
+    # typed execution policy (core.policy) — THE way to pick kernels
+    pol = repro.Policy(backend="pallas", autotune="cached")
+    with pol.scope():
+        y = repro.matmul(a, b)                  # GEMM chokepoint
+        h = repro.gated_mlp(x, wg, wu)          # dual-GEMM SwiGLU
+    o = repro.flash_attention(q, k, v, policy=pol)
+
+    engine = repro.ServingEngine(cfg, params, max_slots=4,
+                                 max_len=256, policy=pol)
+    repro.warm_start(cfg, batch, seq, policy=pol)
+
+Everything in `__all__` is covenanted: tests/test_api_surface.py pins
+the list against a checked-in snapshot so an API break is an explicit
+diff, and CI runs examples/quickstart.py against exactly this surface.
+Deep imports (repro.core.gemm, repro.kernels.ops, ...) keep working but
+are not part of the covenant.
+
+Submodules are imported lazily: `import repro` itself stays light (no
+jax) until a symbol is touched.
+"""
+
+from __future__ import annotations
+
+from repro.core.policy import (LEGACY_BACKEND_NAMES, Policy, current_policy,
+                               set_default_policy)
+
+__version__ = "0.1.0"
+
+#: name -> (module, attribute) for the lazily-bound part of the facade.
+_EXPORTS = {
+    # GEMM chokepoint (core.gemm)
+    "matmul": ("repro.core.gemm", "matmul"),
+    "dense": ("repro.core.gemm", "dense"),
+    "gated_mlp": ("repro.core.gemm", "gated_mlp"),
+    # kernel-level ops (kernels.ops)
+    "flash_attention": ("repro.kernels.ops", "flash_attention"),
+    "add": ("repro.kernels.ops", "add"),
+    "sub": ("repro.kernels.ops", "sub"),
+    # kernel registry (kernels.registry)
+    "register_op": ("repro.kernels.registry", "register_op"),
+    "registered_ops": ("repro.kernels.registry", "registered_ops"),
+    "registered_backends": ("repro.kernels.registry", "registered_backends"),
+    # model configs
+    "get_config": ("repro.configs", "get_config"),
+    "ARCH_NAMES": ("repro.configs", "ARCH_NAMES"),
+    # serving
+    "ServingEngine": ("repro.serving", "ServingEngine"),
+    "Request": ("repro.serving", "Request"),
+    "make_sampler": ("repro.serving", "make_sampler"),
+    "synthetic_trace": ("repro.serving", "synthetic_trace"),
+    # tuning
+    "TuningCache": ("repro.tuning", "TuningCache"),
+    "tune_matmul": ("repro.tuning", "tune_matmul"),
+    "tune_gated_matmul": ("repro.tuning", "tune_gated_matmul"),
+    "tune_flash_attention": ("repro.tuning", "tune_flash_attention"),
+    "warm_start": ("repro.tuning", "warm_start"),
+    "default_exec_policy": ("repro.tuning", "default_exec_policy"),
+    # deprecation shims (string-backend era; warn once per process)
+    "set_default_backend": ("repro.core.gemm", "set_default_backend"),
+    "use_backend": ("repro.core.gemm", "use_backend"),
+}
+
+__all__ = sorted([
+    "Policy", "current_policy", "set_default_policy",
+    "LEGACY_BACKEND_NAMES", "__version__", *_EXPORTS,
+])
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro' has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value      # cache: subsequent lookups skip this
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

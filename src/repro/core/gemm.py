@@ -2,12 +2,12 @@
 
 Every dense contraction in the model zoo — QKV/O projections, FFN, MoE
 expert GEMMs, logits, SSD chunk matmuls — routes through `matmul()` /
-`dense()` / `gated_mlp()` here, so switching the global backend swaps
-the paper's tiled kernel in and out of the *whole framework* (the
-reproduce-vs-optimise axis of EXPERIMENTS.md). The "tuned" backend
-additionally swaps the static tile chooser for per-shape winners from
-the autotuner cache (repro.tuning; launchers warm it via
-tuning.warm_start).
+`dense()` / `gated_mlp()` here, so switching the ambient execution
+Policy (core.policy) swaps the paper's tiled kernel in and out of the
+*whole framework* (the reproduce-vs-optimise axis of EXPERIMENTS.md).
+`Policy(autotune="cached")` additionally swaps the static tile chooser
+for per-shape winners from the autotuner cache (repro.tuning; launchers
+warm it via tuning.warm_start).
 
 Responsibilities on top of kernels.ops:
   * batched / n-d shapes (leading dims folded into M);
@@ -15,73 +15,100 @@ Responsibilities on top of kernels.ops:
   * f64 routing (no MXU path — XLA or interpret only);
   * fused-epilogue eligibility: `dense(activation=..., residual=...)`
     and `gated_mlp()` run the fused Pallas flush only for real
-    f32/bf16-class dtypes on a Pallas backend; f64/complex and the xla
-    backend fall back to the same composition unfused;
-  * custom VJPs so the Pallas backends train: every cotangent GEMM —
-    including those of the fused dense/gated paths — recurses through
-    the same chokepoint, so autotuned tiles serve backward too.
+    f32/bf16-class dtypes on the pallas backend (and only while
+    policy.fuse_epilogues holds); f64/complex and the xla backend fall
+    back to the same composition unfused;
+  * custom VJPs so the Pallas backends train: the Policy rides the
+    nondiff argument slot (it is frozen + hashable) and every cotangent
+    GEMM — including those of the fused dense/gated paths — recurses
+    through the same chokepoint with the SAME policy, so autotuned
+    tiles serve backward too.
+
+Execution selection: explicit `policy=` > deprecated string `backend=`
+> the ambient default (core.policy.current_policy — scope() /
+set_default_policy / $REPRO_POLICY). The pre-Policy entry points
+`set_default_backend` / `use_backend` survive below as deprecation
+shims over that ambient default.
 """
 
 from __future__ import annotations
 
 import contextlib
-import threading
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import policy as _pol
 from repro.core import precision as _prec
+from repro.core.policy import Policy
 from repro.kernels import ops as _ops
 
-_state = threading.local()
 
-
-def _backend() -> str:
-    return getattr(_state, "backend", "xla")
-
+# ----------------------------------------------------------------------
+# deprecated string-backend shims (the ambient default is now a Policy)
+# ----------------------------------------------------------------------
 
 def set_default_backend(name: str) -> None:
-    assert name in _ops.MATMUL_BACKENDS, name
-    _state.backend = name
+    """Deprecated: set_default_policy(Policy.from_backend(name))."""
+    _pol.warn_deprecated(
+        "set_default_backend",
+        "core.gemm.set_default_backend is deprecated; use "
+        "repro.core.policy.set_default_policy(Policy.from_backend(name)). "
+        "Note: the default is now process-wide (the old function was "
+        "per-thread) — use Policy.from_backend(name).scope() for "
+        "thread-local selection")
+    _pol.set_default_policy(Policy.from_backend(name))
 
 
 @contextlib.contextmanager
 def use_backend(name: str):
-    prev = _backend()
-    set_default_backend(name)
-    try:
+    """Deprecated: Policy.from_backend(name).scope()."""
+    _pol.warn_deprecated(
+        "use_backend",
+        "core.gemm.use_backend is deprecated; use "
+        "Policy.from_backend(name).scope()")
+    with Policy.from_backend(name).scope():
         yield
-    finally:
-        set_default_backend(prev)
 
 
-def _matmul_2d(a, b, backend, out_dtype):
+# ----------------------------------------------------------------------
+# 2D chokepoint + custom VJP (policy is the nondiff argument)
+# ----------------------------------------------------------------------
+
+def _route_dtype(dtype, policy: Policy) -> Policy:
+    """f64 has no MXU path: compiled (non-interpret) kernel backends
+    fall back to XLA emulation; the interpreter runs f64 fine."""
+    if (jnp.dtype(dtype) == jnp.float64 and policy.backend != "xla"
+            and not policy.resolved_interpret):
+        return policy.replace(backend="xla")
+    return policy
+
+
+def _matmul_2d(a, b, policy: Policy, out_dtype):
     if jnp.issubdtype(a.dtype, jnp.complexfloating):
-        if backend == "xla":
-            return _ops.matmul(a, b, backend="xla", out_dtype=out_dtype)
-        real = lambda x, y: _ops.matmul(x, y, backend=backend)
+        if policy.backend == "xla":
+            return _ops.matmul(a, b, policy=policy, out_dtype=out_dtype)
+        real = lambda x, y: _ops.matmul(x, y, policy=policy)
         return _prec.complex_matmul(a, b, real, algorithm="gauss3")
-    if a.dtype == jnp.float64 and backend in ("pallas", "naive", "tuned"):
-        # no MXU f64 path: compiled-TPU f64 falls back to XLA emulation.
-        backend = "xla"
-    return _ops.matmul(a, b, backend=backend, out_dtype=out_dtype)
+    policy = _route_dtype(a.dtype, policy)
+    return _ops.matmul(a, b, policy=policy, out_dtype=out_dtype)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _matmul_vjp(a, b, backend, out_dtype):
-    return _matmul_2d(a, b, backend, out_dtype)
+def _matmul_vjp(a, b, policy, out_dtype):
+    return _matmul_2d(a, b, policy, out_dtype)
 
 
-def _matmul_fwd(a, b, backend, out_dtype):
-    return _matmul_2d(a, b, backend, out_dtype), (a, b)
+def _matmul_fwd(a, b, policy, out_dtype):
+    return _matmul_2d(a, b, policy, out_dtype), (a, b)
 
 
-def _matmul_bwd(backend, out_dtype, res, g):
+def _matmul_bwd(policy, out_dtype, res, g):
     a, b = res
     g = g.astype(a.dtype)
-    da = _matmul_2d(g, b.T, backend, a.dtype)
-    db = _matmul_2d(a.T, g, backend, b.dtype)
+    da = _matmul_2d(g, b.T, policy, a.dtype)
+    db = _matmul_2d(a.T, g, policy, b.dtype)
     return da, db
 
 
@@ -89,22 +116,23 @@ _matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
 
 
 def matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
+           policy: Policy | None = None,
            backend: str | None = None) -> jnp.ndarray:
     """A @ B for a: (..., M, K), b: (K, N) or (..., K, N) matching."""
-    backend = backend or _backend()
-    out_dtype = out_dtype or a.dtype
+    pol = _pol.resolve(policy, backend)
+    out_dtype = out_dtype or pol.resolved_out_dtype(a.dtype)
     if a.ndim == b.ndim == 2:
-        return _matmul_vjp(a, b, backend, out_dtype)
+        return _matmul_vjp(a, b, pol, out_dtype)
     if b.ndim == 2:
         lead = a.shape[:-1]
-        out = _matmul_vjp(a.reshape(-1, a.shape[-1]), b, backend, out_dtype)
+        out = _matmul_vjp(a.reshape(-1, a.shape[-1]), b, pol, out_dtype)
         return out.reshape(*lead, b.shape[-1])
     # batched-batched: vmap the 2D chokepoint over leading dims.
     assert a.shape[:-2] == b.shape[:-2], (a.shape, b.shape)
     lead = a.shape[:-2]
     af = a.reshape((-1,) + a.shape[-2:])
     bf = b.reshape((-1,) + b.shape[-2:])
-    out = jax.vmap(lambda x, y: _matmul_vjp(x, y, backend, out_dtype))(af, bf)
+    out = jax.vmap(lambda x, y: _matmul_vjp(x, y, pol, out_dtype))(af, bf)
     return out.reshape(lead + out.shape[-2:])
 
 
@@ -114,27 +142,28 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *, out_dtype=None,
 
 _ACTIVATIONS = {"gelu": jax.nn.gelu, "silu": jax.nn.silu}
 _ACT_EPILOGUE = {"gelu": "bias_gelu", "silu": "bias_silu", None: "bias"}
-_PALLAS_BACKENDS = ("pallas", "pallas_interpret", "tuned", "tuned_interpret")
 
 
-def _fusible(dtype, backend: str) -> bool:
-    """Fused epilogues run only where the tiled kernel itself runs: a
-    Pallas backend on a real non-f64 dtype. Everything else (xla, naive,
-    f64 without an MXU path, complex decomposition) composes the same
-    function unfused through the plain chokepoint."""
-    return (backend in _PALLAS_BACKENDS
+def _fusible(dtype, policy: Policy) -> bool:
+    """Fused epilogues run only where the tiled kernel itself runs: the
+    pallas backend on a real non-f64 dtype, with the policy's
+    fuse_epilogues toggle on. Everything else (xla, naive, f64 without
+    an MXU path, complex decomposition, fuse_epilogues=False) composes
+    the same function unfused through the plain chokepoint."""
+    return (policy.backend == "pallas"
+            and policy.fuse_epilogues
             and not jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating)
             and jnp.dtype(dtype) != jnp.float64)
 
 
-def _dense_ep_2d(x, w, b, r, activation, backend, out_dtype):
+def _dense_ep_2d(x, w, b, r, activation, policy, out_dtype):
     """y = act(x @ w + b) + r on 2D operands, fused where eligible.
 
     Fusion rule: (bias, activation) take the fused flush when present;
     a residual rides the fused flush only when it is the *sole*
     epilogue (the kernel lattice is bias*/act XOR residual)."""
-    if not _fusible(x.dtype, backend):
-        y = _matmul_2d(x, w, backend, out_dtype)
+    if not _fusible(x.dtype, policy):
+        y = _matmul_2d(x, w, policy, out_dtype)
         if b is not None:
             y = y + b.astype(y.dtype)
         if activation is not None:
@@ -144,40 +173,41 @@ def _dense_ep_2d(x, w, b, r, activation, backend, out_dtype):
         return y
     if b is not None or activation is not None:
         bias = b if b is not None else jnp.zeros((w.shape[-1],), x.dtype)
-        y = _ops.matmul(x, w, backend=backend, out_dtype=out_dtype,
+        y = _ops.matmul(x, w, policy=policy, out_dtype=out_dtype,
                         epilogue=_ACT_EPILOGUE[activation], bias=bias)
         if r is not None:
             y = y + r.astype(y.dtype)
         return y
     if r is not None:
         if r.shape == (x.shape[0], w.shape[-1]):
-            return _ops.matmul(x, w, backend=backend, out_dtype=out_dtype,
+            return _ops.matmul(x, w, policy=policy, out_dtype=out_dtype,
                                epilogue="residual", residual=r)
         # broadcastable-but-not-(m, n) residual: add it unfused so the
         # xla and Pallas backends keep computing the same function
-        y = _ops.matmul(x, w, backend=backend, out_dtype=out_dtype)
+        y = _ops.matmul(x, w, policy=policy, out_dtype=out_dtype)
         return y + r.astype(y.dtype)
-    return _ops.matmul(x, w, backend=backend, out_dtype=out_dtype)
+    return _ops.matmul(x, w, policy=policy, out_dtype=out_dtype)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
-def _dense_ep_vjp(x, w, b, r, activation, backend, out_dtype):
-    return _dense_ep_2d(x, w, b, r, activation, backend, out_dtype)
+def _dense_ep_vjp(x, w, b, r, activation, policy, out_dtype):
+    return _dense_ep_2d(x, w, b, r, activation, policy, out_dtype)
 
 
-def _dense_ep_fwd(x, w, b, r, activation, backend, out_dtype):
-    return _dense_ep_2d(x, w, b, r, activation, backend, out_dtype), \
+def _dense_ep_fwd(x, w, b, r, activation, policy, out_dtype):
+    return _dense_ep_2d(x, w, b, r, activation, policy, out_dtype), \
         (x, w, b, r)
 
 
-def _dense_ep_bwd(activation, backend, out_dtype, res, g):
+def _dense_ep_bwd(activation, policy, out_dtype, res, g):
     """Differentiate the unfused composition built on the matmul
     chokepoint: the recompute GEMM and both cotangent GEMMs all recurse
-    through _matmul_vjp, so the Pallas/tuned backends serve them too."""
+    through _matmul_vjp with the same policy, so the pallas/autotuned
+    configurations serve them too."""
     x, w, b, r = res
 
     def ref(ops_):
-        z = _matmul_vjp(ops_["x"], ops_["w"], backend, out_dtype)
+        z = _matmul_vjp(ops_["x"], ops_["w"], policy, out_dtype)
         if "b" in ops_:
             z = z + ops_["b"].astype(z.dtype)
         if activation is not None:
@@ -199,30 +229,29 @@ def _dense_ep_bwd(activation, backend, out_dtype, res, g):
 _dense_ep_vjp.defvjp(_dense_ep_fwd, _dense_ep_bwd)
 
 
-def _gated_2d(x, wg, wu, backend, out_dtype):
-    if not _fusible(x.dtype, backend):
-        g = _matmul_2d(x, wg, backend, out_dtype)
-        u = _matmul_2d(x, wu, backend, out_dtype)
+def _gated_2d(x, wg, wu, policy, out_dtype):
+    if not _fusible(x.dtype, policy):
+        g = _matmul_2d(x, wg, policy, out_dtype)
+        u = _matmul_2d(x, wu, policy, out_dtype)
         return (jax.nn.silu(g) * u).astype(out_dtype)
-    return _ops.gated_matmul(x, wg, wu, backend=backend,
-                             out_dtype=out_dtype)
+    return _ops.gated_matmul(x, wg, wu, policy=policy, out_dtype=out_dtype)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _gated_vjp(x, wg, wu, backend, out_dtype):
-    return _gated_2d(x, wg, wu, backend, out_dtype)
+def _gated_vjp(x, wg, wu, policy, out_dtype):
+    return _gated_2d(x, wg, wu, policy, out_dtype)
 
 
-def _gated_fwd(x, wg, wu, backend, out_dtype):
-    return _gated_2d(x, wg, wu, backend, out_dtype), (x, wg, wu)
+def _gated_fwd(x, wg, wu, policy, out_dtype):
+    return _gated_2d(x, wg, wu, policy, out_dtype), (x, wg, wu)
 
 
-def _gated_bwd(backend, out_dtype, res, g):
+def _gated_bwd(policy, out_dtype, res, g):
     x, wg, wu = res
 
     def ref(x_, wg_, wu_):
-        gt = _matmul_vjp(x_, wg_, backend, out_dtype)
-        up = _matmul_vjp(x_, wu_, backend, out_dtype)
+        gt = _matmul_vjp(x_, wg_, policy, out_dtype)
+        up = _matmul_vjp(x_, wu_, policy, out_dtype)
         return jax.nn.silu(gt) * up
 
     out, vjp = jax.vjp(ref, x, wg, wu)
@@ -239,44 +268,48 @@ def _fold_leading(x):
 def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
           *, activation: str | None = None,
           residual: jnp.ndarray | None = None,
-          out_dtype=None, backend: str | None = None) -> jnp.ndarray:
+          out_dtype=None, policy: Policy | None = None,
+          backend: str | None = None) -> jnp.ndarray:
     """y = act(x @ w + b) + residual for x: (..., K), w: (K, N) — the
     layer-level API. activation in {None, "gelu", "silu"}. residual
     should match the output shape (the fused flush requires it; a 2D
-    broadcastable residual is added unfused instead). On Pallas backends
-    bias/activation (and a lone full-shape residual) are applied inside
-    the kernel's flush phase — see kernels.matmul EPILOGUES."""
-    backend = backend or _backend()
-    out_dtype = out_dtype or x.dtype
+    broadcastable residual is added unfused instead). On the pallas
+    backend bias/activation (and a lone full-shape residual) are
+    applied inside the kernel's flush phase — see kernels.matmul
+    EPILOGUES."""
+    pol = _pol.resolve(policy, backend)
+    out_dtype = out_dtype or pol.resolved_out_dtype(x.dtype)
     if b is None and activation is None and residual is None:
-        return matmul(x, w, out_dtype=out_dtype, backend=backend)
-    assert activation in (None, *_ACTIVATIONS), activation
+        return matmul(x, w, out_dtype=out_dtype, policy=pol)
+    if activation not in (None, *_ACTIVATIONS):
+        raise ValueError(f"unknown activation {activation!r}; expected "
+                         f"one of {(None, *_ACTIVATIONS)}")
     if x.ndim == 2:
-        return _dense_ep_vjp(x, w, b, residual, activation, backend,
-                             out_dtype)
+        return _dense_ep_vjp(x, w, b, residual, activation, pol, out_dtype)
     xf, lead = _fold_leading(x)
     rf = residual.reshape(-1, residual.shape[-1]) \
         if residual is not None else None
-    out = _dense_ep_vjp(xf, w, b, rf, activation, backend, out_dtype)
+    out = _dense_ep_vjp(xf, w, b, rf, activation, pol, out_dtype)
     return out.reshape(*lead, w.shape[-1])
 
 
 def gated_mlp(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
-              *, out_dtype=None, backend: str | None = None) -> jnp.ndarray:
+              *, out_dtype=None, policy: Policy | None = None,
+              backend: str | None = None) -> jnp.ndarray:
     """silu(x @ w_gate) * (x @ w_up) — the SwiGLU hidden phase.
 
     x: (..., K); weights (K, F), or batched (..., K, F) with matching
     leading dims (MoE expert banks — vmapped over the 2D chokepoint).
-    Pallas backends run the dual-GEMM kernel: one A stream against both
-    weight operands, no HBM intermediates."""
-    backend = backend or _backend()
-    out_dtype = out_dtype or x.dtype
+    The pallas backend runs the dual-GEMM kernel: one A stream against
+    both weight operands, no HBM intermediates."""
+    pol = _pol.resolve(policy, backend)
+    out_dtype = out_dtype or pol.resolved_out_dtype(x.dtype)
     assert w_gate.shape == w_up.shape, (w_gate.shape, w_up.shape)
     if w_gate.ndim == 2:
         if x.ndim == 2:
-            return _gated_vjp(x, w_gate, w_up, backend, out_dtype)
+            return _gated_vjp(x, w_gate, w_up, pol, out_dtype)
         xf, lead = _fold_leading(x)
-        out = _gated_vjp(xf, w_gate, w_up, backend, out_dtype)
+        out = _gated_vjp(xf, w_gate, w_up, pol, out_dtype)
         return out.reshape(*lead, w_gate.shape[-1])
     assert x.shape[:-2] == w_gate.shape[:-2], (x.shape, w_gate.shape)
     lead = x.shape[:-2]
@@ -284,6 +317,6 @@ def gated_mlp(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
     gf = w_gate.reshape((-1,) + w_gate.shape[-2:])
     uf = w_up.reshape((-1,) + w_up.shape[-2:])
     out = jax.vmap(
-        lambda x_, g_, u_: _gated_vjp(x_, g_, u_, backend, out_dtype)
+        lambda x_, g_, u_: _gated_vjp(x_, g_, u_, pol, out_dtype)
     )(xf, gf, uf)
     return out.reshape(lead + out.shape[-2:])

@@ -86,6 +86,10 @@ TESLA_C1060 = ChipSpec(
 
 DEFAULT_CHIP = TPU_V5E
 
+#: Name -> spec registry (core.policy parses `chip=` policy fields
+#: against this, so REPRO_POLICY can select any modeled chip).
+CHIPS = {c.name: c for c in (TPU_V5E, TESLA_C2050, TESLA_C1060)}
+
 
 def fingerprint(chip: ChipSpec | None = None) -> str:
     """Hardware identity string keying the tuning cache (repro.tuning).

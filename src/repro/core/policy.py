@@ -1,0 +1,286 @@
+"""Execution policy — the one typed object that says HOW to run.
+
+The paper's speedup is a function of execution strategy (hierarchy-aware
+tiling vs. naive vs. host fallback, compiled vs. interpreted, static vs.
+autotuned tiles). Before this module that strategy was smeared across
+free-form strings ("tuned_interpret"), ad-hoc ``interpret=`` kwargs and
+a module-global default in core.gemm. `Policy` collects every execution
+knob into a frozen, hashable dataclass:
+
+    backend         WHICH kernel family: "xla" | "pallas" | "naive"
+                    (validated at dispatch against the kernel registry,
+                    kernels.registry — not a hand-maintained tuple)
+    interpret       run Pallas kernels in the interpreter (None = auto:
+                    interpret everywhere except a real TPU)
+    chip            the hardware model used for tile sizing
+    autotune        "off" = static chooser; "cached" = serve tile
+                    winners from the autotuner cache (repro.tuning)
+    fuse_epilogues  allow bias/act/residual to ride the kernel flush
+    out_dtype       default output dtype name (None = input dtype)
+
+Because it is frozen and hashable it works as a jit static argument and
+a custom_vjp nondiff argument: identical policies never retrace, and a
+changed policy retraces exactly once.
+
+Ambient default: `current_policy()` resolves, in order, the innermost
+active `policy.scope()` on this thread, the process default set by
+`set_default_policy()`, the REPRO_POLICY environment variable, and
+finally `Policy()` (plain XLA). Legacy backend strings ("tuned",
+"pallas_interpret", ...) map through `Policy.from_backend`; the old
+string-kwarg call sites survive as deprecation shims that land here.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import warnings
+from typing import Optional
+
+from repro.core import hw
+
+#: Legacy string-backend spellings accepted by `Policy.from_backend`
+#: (and therefore by every ``backend=`` deprecation shim and CLI flag).
+LEGACY_BACKEND_NAMES = (
+    "xla", "pallas", "pallas_interpret", "naive", "naive_interpret",
+    "tuned", "tuned_interpret",
+)
+
+AUTOTUNE_MODES = ("off", "cached")
+
+ENV_VAR = "REPRO_POLICY"
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    backend: str = "xla"
+    interpret: Optional[bool] = None
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP
+    autotune: str = "off"
+    fuse_epilogues: bool = True
+    out_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.autotune not in AUTOTUNE_MODES:
+            raise ValueError(
+                f"unknown autotune mode {self.autotune!r}; "
+                f"expected one of {AUTOTUNE_MODES}")
+        if self.interpret is not None and not isinstance(self.interpret, bool):
+            raise ValueError(f"interpret must be None or bool, "
+                             f"got {self.interpret!r}")
+        # `backend` is validated at dispatch time against the kernel
+        # registry (kernels.registry.get_impl) so the error can list
+        # exactly the implementations that are actually registered.
+
+    # --- resolution -------------------------------------------------
+    @property
+    def resolved_interpret(self) -> bool:
+        """interpret=None means "interpret unless this host is a real
+        TPU" — the single source of truth the old per-call-site
+        suffix-sniffing (`endswith("_interpret")`) collapsed into."""
+        if self.interpret is not None:
+            return self.interpret
+        import jax  # deferred: keep `import repro` light
+        return jax.devices()[0].platform != "tpu"
+
+    @property
+    def kernel_fingerprint(self) -> str:
+        """The execution-relevant fields as a stable short string:
+        "xla", "pallas", "pallas_interpret", "naive_interpret". Keys
+        the autotuner cache (interpreter timings must never leak into
+        compiled-TPU decisions) and matches the historical cache-key
+        backend component, so existing tuning.json files stay valid."""
+        if self.backend == "xla":
+            return "xla"
+        return (f"{self.backend}_interpret" if self.resolved_interpret
+                else self.backend)
+
+    def fingerprint(self) -> str:
+        """Full stable description — recorded in bench JSON
+        (benchmarks.common.write_bench_json) and usable as REPRO_POLICY."""
+        parts = [f"backend={self.backend}"]
+        if self.interpret is not None:
+            parts.append(f"interpret={str(self.interpret).lower()}")
+        if self.chip is not hw.DEFAULT_CHIP:
+            parts.append(f"chip={self.chip.name}")
+        if self.autotune != "off":
+            parts.append(f"autotune={self.autotune}")
+        if not self.fuse_epilogues:
+            parts.append("fuse_epilogues=false")
+        if self.out_dtype is not None:
+            parts.append(f"out_dtype={self.out_dtype}")
+        return ",".join(parts)
+
+    def resolved_out_dtype(self, fallback):
+        return self.out_dtype if self.out_dtype is not None else fallback
+
+    # --- derived policies -------------------------------------------
+    def replace(self, **kw) -> "Policy":
+        return dataclasses.replace(self, **kw)
+
+    # --- ambient default --------------------------------------------
+    @contextlib.contextmanager
+    def scope(self):
+        """Make this policy the ambient default on this thread:
+
+            with Policy(backend="pallas").scope():
+                gemm.matmul(a, b)        # runs the tiled kernel
+
+        Scopes nest; the previous ambient policy is restored on exit
+        (tests/test_policy.py pins the nesting/restore semantics)."""
+        stack = _scope_stack()
+        stack.append(self)
+        try:
+            yield self
+        finally:
+            stack.pop()
+
+    # --- legacy spellings -------------------------------------------
+    @classmethod
+    def from_backend(cls, name: str) -> "Policy":
+        """Map a legacy backend string onto the typed policy. "tuned"
+        was never a kernel — it is the tiled Pallas kernel with cached
+        tiles, i.e. autotune="cached" on the policy."""
+        try:
+            return _LEGACY[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {name!r}; expected a Policy or one of "
+                f"{LEGACY_BACKEND_NAMES}") from None
+
+    @classmethod
+    def parse(cls, spec: str) -> "Policy":
+        """Parse a policy spec string: either a legacy backend name
+        ("tuned_interpret") or comma-separated fields as produced by
+        `fingerprint()` ("backend=pallas,interpret=true,autotune=cached").
+        This is the REPRO_POLICY env-var format."""
+        spec = spec.strip()
+        if not spec:
+            return cls()
+        if "=" not in spec:
+            return cls.from_backend(spec)
+        kw = {}
+        for item in spec.split(","):
+            key, _, val = item.partition("=")
+            key, val = key.strip(), val.strip()
+            if key == "backend":
+                kw[key] = val
+            elif key in ("interpret", "fuse_epilogues"):
+                if val.lower() not in ("true", "false", "1", "0"):
+                    raise ValueError(f"policy field {key}={val!r}: "
+                                     "expected true/false")
+                kw[key] = val.lower() in ("true", "1")
+            elif key == "autotune":
+                kw[key] = val
+            elif key == "out_dtype":
+                kw[key] = val
+            elif key == "chip":
+                try:
+                    kw[key] = hw.CHIPS[val]
+                except KeyError:
+                    raise ValueError(
+                        f"unknown chip {val!r}; expected one of "
+                        f"{sorted(hw.CHIPS)}") from None
+            else:
+                raise ValueError(
+                    f"unknown policy field {key!r} in {spec!r}; expected "
+                    "backend/interpret/chip/autotune/fuse_epilogues/"
+                    "out_dtype")
+        return cls(**kw)
+
+
+_LEGACY = {
+    "xla": Policy(),
+    "pallas": Policy(backend="pallas", interpret=False),
+    "pallas_interpret": Policy(backend="pallas", interpret=True),
+    "naive": Policy(backend="naive", interpret=False),
+    "naive_interpret": Policy(backend="naive", interpret=True),
+    "tuned": Policy(backend="pallas", interpret=False, autotune="cached"),
+    "tuned_interpret": Policy(backend="pallas", interpret=True,
+                              autotune="cached"),
+}
+
+
+# ----------------------------------------------------------------------
+# Ambient resolution
+# ----------------------------------------------------------------------
+
+_tls = threading.local()
+_process_default: Optional[Policy] = None
+_env_cache: tuple = (None, None)      # (env string, parsed Policy)
+
+
+def _scope_stack() -> list:
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    return stack
+
+
+def set_default_policy(policy: Optional[Policy]) -> None:
+    """Set the process-wide default (None = back to env/xla). An active
+    `scope()` still wins on its thread."""
+    global _process_default
+    if policy is not None and not isinstance(policy, Policy):
+        raise TypeError(f"expected Policy or None, got {type(policy)}; "
+                        "legacy strings go through Policy.from_backend")
+    _process_default = policy
+
+
+def current_policy() -> Policy:
+    """Innermost scope() > set_default_policy() > $REPRO_POLICY > xla."""
+    stack = getattr(_tls, "stack", None)
+    if stack:
+        return stack[-1]
+    if _process_default is not None:
+        return _process_default
+    env = os.environ.get(ENV_VAR)
+    if env:
+        global _env_cache
+        if _env_cache[0] != env:
+            _env_cache = (env, Policy.parse(env))
+        return _env_cache[1]
+    return Policy()
+
+
+def resolve(policy: Optional[Policy] = None,
+            backend: Optional[str] = None) -> Policy:
+    """The one resolution rule every dispatcher uses: explicit policy >
+    legacy string kwarg (deprecation shim) > ambient default."""
+    if policy is not None:
+        if isinstance(policy, str):
+            # tolerated spelling: policy="pallas_interpret" — parsed,
+            # not deprecated (the string is an explicit policy spec).
+            return Policy.parse(policy)
+        if not isinstance(policy, Policy):
+            raise TypeError(f"policy must be a Policy, got {type(policy)}")
+        return policy
+    if backend is not None:
+        warn_deprecated(
+            "backend_kwarg",
+            "string backend= kwargs are deprecated; pass "
+            "policy=Policy.from_backend(name) (or enter "
+            "Policy(...).scope()) instead")
+        return Policy.from_backend(backend)
+    return current_policy()
+
+
+# ----------------------------------------------------------------------
+# Deprecation plumbing (warn once per shim, resettable for tests)
+# ----------------------------------------------------------------------
+
+_warned: set = set()
+
+
+def warn_deprecated(key: str, message: str) -> None:
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def reset_deprecation_warnings() -> None:
+    """Test hook: make every shim warn again."""
+    _warned.clear()

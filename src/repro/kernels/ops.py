@@ -1,50 +1,52 @@
-"""jit'd wrappers around the Pallas kernels.
+"""Policy-dispatched wrappers around the Pallas kernels.
 
-Handles the plumbing the kernels themselves keep out of scope: backend
-selection, shape padding to block multiples, block-size choice via
-core.blocking (the paper's shared-memory sizing argument), and the
-interpret-mode fallback used on this CPU-only container.
+Handles the plumbing the kernels themselves keep out of scope: shape
+padding to block multiples, block-size choice via core.blocking (the
+paper's shared-memory sizing argument), epilogue operand validation,
+and the interpret-mode fallback used on CPU-only containers.
 
-Backends:
-  xla               jnp.matmul — what the multi-pod dry-run compiles
-  pallas            tiled Pallas kernel, compiled for TPU (Listing 4)
-  pallas_interpret  same kernel, interpreter — CPU validation
-  naive             hierarchy-blind Pallas kernel (Listing 3)
-  naive_interpret   its interpreter twin
-  tuned             tiled kernel with tile sizes served from the
-                    autotuner cache (repro.tuning); falls back to the
-                    static core.blocking chooser on a cache miss or
-                    hardware-fingerprint mismatch
-  tuned_interpret   its interpreter twin (cache keyed separately)
+Execution selection is typed: every public op takes a
+`core.policy.Policy` (explicit `policy=`, or the ambient
+`policy.scope()` default) and dispatches through the kernel registry
+(kernels.registry):
+
+    op name     registered backends
+    matmul      xla (jnp reference) | pallas (tiled, Listing 4) |
+                naive (hierarchy-blind, Listing 3)
+    gated_matmul  xla/naive (unfused compose) | pallas (dual-GEMM)
+    flash_attention  xla (reference) | pallas (flash kernel)
+    add / sub   xla | pallas/naive (elementwise kernel)
+
+`policy.interpret` (None = auto off-TPU) decides interpreter vs.
+compiled for every Pallas op — no per-op suffix sniffing.
+`policy.autotune == "cached"` serves tile winners from the autotuner
+cache (repro.tuning) with the static core.blocking chooser as fallback;
+the legacy "tuned"/"tuned_interpret" backend strings map onto exactly
+that policy via the compat shims at the bottom of this module (the only
+place backend strings are still interpreted).
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import blocking, hw
+from repro.core import policy as _policy
+from repro.core.policy import Policy
 from repro.kernels import elementwise as _ew
 from repro.kernels import flash_attention as _fa
 from repro.kernels import matmul as _mm
 from repro.kernels import matmul_naive as _mmn
 from repro.kernels import ref as _ref
+from repro.kernels import registry as _registry
+from repro.kernels.registry import register_op
 from repro.tuning import cache as _tcache
 
-MATMUL_BACKENDS = (
-    "xla", "pallas", "pallas_interpret", "naive", "naive_interpret",
-    "tuned", "tuned_interpret",
-)
 
-
-def resolve_tuned(backend: str) -> str:
-    """tuned(_interpret) executes the tiled kernel; cache entries are
-    keyed by the execution backend so interpreter timings never leak
-    into compiled-TPU decisions."""
-    return "pallas_interpret" if backend.endswith("interpret") else "pallas"
-
+# ----------------------------------------------------------------------
+# shared helpers
+# ----------------------------------------------------------------------
 
 def _pad2(x: jnp.ndarray, m_to: int, n_to: int) -> jnp.ndarray:
     m, n = x.shape
@@ -68,77 +70,77 @@ def _usable_block(block, served: bool) -> bool:
     return ok
 
 
+def _check_epilogue(epilogue: str) -> None:
+    """Validated against the kernel's own lattice (kernels.matmul
+    EPILOGUES) — the registry of fused flushes, not a local tuple."""
+    if epilogue not in _mm.EPILOGUES:
+        raise ValueError(f"unknown epilogue {epilogue!r}; registered "
+                         f"epilogues: {_mm.EPILOGUES}")
+
+
 def _epilogue_operand(epilogue, bias, residual, m, n, mp, np_):
     """Validate + pad the flush-phase operand to the padded tile grid.
     The operand keeps its own dtype — the kernel casts it to the
     accumulator dtype, mirroring the unfused ref.epilogue_ref cast, so
     a residual/bias wider than the inputs loses no precision."""
     if epilogue == "none":
-        assert bias is None and residual is None, \
-            "bias/residual operands need an epilogue"
+        if bias is not None or residual is not None:
+            raise ValueError("bias/residual operands need an epilogue")
         return None
     if epilogue == "residual":
-        assert residual is not None and residual.shape == (m, n), epilogue
+        if residual is None or residual.shape != (m, n):
+            raise ValueError(
+                f"epilogue='residual' needs residual of shape {(m, n)}, "
+                f"got {None if residual is None else residual.shape}")
         return _pad2(residual, mp, np_)
-    assert epilogue in _mm.EPILOGUES, epilogue
-    assert bias is not None, f"epilogue={epilogue} needs bias="
+    if bias is None:
+        raise ValueError(f"epilogue={epilogue!r} needs bias=")
     e = bias.reshape(1, -1)
-    assert e.shape == (1, n), (bias.shape, n)
+    if e.shape != (1, n):
+        raise ValueError(f"bias shape {bias.shape} incompatible with n={n}")
     return _pad2(e, 1, np_)
 
 
-def matmul(
-    a: jnp.ndarray,
-    b: jnp.ndarray,
-    *,
-    backend: str = "xla",
-    out_dtype=None,
-    block: blocking.BlockConfig | None = None,
-    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
-    epilogue: str = "none",
-    bias: jnp.ndarray | None = None,
-    residual: jnp.ndarray | None = None,
-) -> jnp.ndarray:
-    """2D real GEMM through the selected backend, padding as needed.
+# ----------------------------------------------------------------------
+# matmul implementations (self-registered)
+# ----------------------------------------------------------------------
 
-    epilogue/bias/residual select a fused flush (kernels.matmul
-    EPILOGUES): the Pallas backends apply it inside the kernel on the
-    f32 accumulator; xla and naive apply the same composition unfused
-    (ref.epilogue_ref), so every backend computes the same function.
-    """
-    assert a.ndim == 2 and b.ndim == 2, (a.shape, b.shape)
+@register_op("matmul", backend="xla")
+def _matmul_xla(a, b, *, policy, out_dtype, block, epilogue, bias, residual):
+    y = _ref.matmul_ref(a, b, out_dtype=out_dtype)
+    return _ref.epilogue_ref(y, epilogue, bias, residual)
+
+
+@register_op("matmul", backend="naive")
+def _matmul_naive(a, b, *, policy, out_dtype, block, epilogue, bias,
+                  residual):
     m, k = a.shape
-    k2, n = b.shape
-    assert k == k2
-    out_dtype = out_dtype or a.dtype
-
-    if backend == "xla":
-        y = _ref.matmul_ref(a, b, out_dtype=out_dtype)
-        return _ref.epilogue_ref(y, epilogue, bias, residual)
-
-    served = False
-    if backend.startswith("tuned"):
-        backend = resolve_tuned(backend)
-        if block is None:
-            block = _tcache.get_cache().get_matmul(
-                m, n, k, a.dtype, backend, epilogue=epilogue)
-            served = block is not None
-            # miss / fingerprint mismatch -> block stays None and the
-            # static chooser below picks the paper's default tiles.
-
-    interpret = backend.endswith("interpret")
+    n = b.shape[1]
+    chip = policy.chip
     itemsize = jnp.dtype(a.dtype).itemsize
+    sub = chip.sublane(itemsize)
+    mp, np_ = _round_up(m, sub), _round_up(n, chip.lane)
+    out = _mmn.matmul_naive(
+        _pad2(a, mp, k), _pad2(b, k, np_),
+        out_dtype=out_dtype, interpret=policy.resolved_interpret)[:m, :n]
+    return _ref.epilogue_ref(out, epilogue, bias, residual)
 
-    if backend.startswith("naive"):
-        sub = chip.sublane(itemsize)
-        mp, np_ = _round_up(m, sub), _round_up(n, chip.lane)
-        out = _mmn.matmul_naive(
-            _pad2(a, mp, k), _pad2(b, k, np_),
-            out_dtype=out_dtype, interpret=interpret)[:m, :n]
-        return _ref.epilogue_ref(out, epilogue, bias, residual)
 
+@register_op("matmul", backend="pallas")
+def _matmul_pallas(a, b, *, policy, out_dtype, block, epilogue, bias,
+                   residual):
+    m, k = a.shape
+    n = b.shape[1]
+    served = False
+    if block is None and policy.autotune == "cached":
+        block = _tcache.get_cache().get_matmul(
+            m, n, k, a.dtype, policy, epilogue=epilogue)
+        served = block is not None
+        # miss / fingerprint mismatch -> block stays None and the
+        # static chooser below picks the paper's default tiles.
+    itemsize = jnp.dtype(a.dtype).itemsize
     if not _usable_block(block, served):
-        block = blocking.choose_block_config(m, n, k, itemsize, chip)
+        block = blocking.choose_block_config(m, n, k, itemsize, policy.chip)
     # padding to block multiples guarantees the kernel's clamp
     # re-validation passes: every dim is a multiple of its tile edge.
     mp = _round_up(m, block.bm)
@@ -148,8 +150,78 @@ def matmul(
     out = _mm.matmul_tiled(
         _pad2(a, mp, kp), _pad2(b, kp, np_),
         bm=block.bm, bn=block.bn, bk=block.bk,
-        out_dtype=out_dtype, interpret=interpret,
+        out_dtype=out_dtype, interpret=policy.resolved_interpret,
         epilogue=epilogue, epilogue_operand=e)
+    return out[:m, :n]
+
+
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    policy: Policy | None = None,
+    backend: str | None = None,        # deprecated string shim
+    out_dtype=None,
+    block: blocking.BlockConfig | None = None,
+    chip: hw.ChipSpec | None = None,
+    epilogue: str = "none",
+    bias: jnp.ndarray | None = None,
+    residual: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """2D real GEMM through the policy-selected backend, padding as
+    needed.
+
+    epilogue/bias/residual select a fused flush (kernels.matmul
+    EPILOGUES): the pallas backend applies it inside the kernel on the
+    f32 accumulator; xla and naive apply the same composition unfused
+    (ref.epilogue_ref), so every backend computes the same function.
+    """
+    assert a.ndim == 2 and b.ndim == 2, (a.shape, b.shape)
+    assert a.shape[1] == b.shape[0], (a.shape, b.shape)
+    pol = _policy.resolve(policy, backend)
+    if chip is not None and chip is not pol.chip:
+        pol = pol.replace(chip=chip)
+    _check_epilogue(epilogue)
+    out_dtype = out_dtype or pol.resolved_out_dtype(a.dtype)
+    impl = _registry.get_impl("matmul", pol.backend)
+    return impl(a, b, policy=pol, out_dtype=out_dtype, block=block,
+                epilogue=epilogue, bias=bias, residual=residual)
+
+
+# ----------------------------------------------------------------------
+# gated matmul (SwiGLU dual-GEMM)
+# ----------------------------------------------------------------------
+
+@register_op("gated_matmul", backend="xla")
+@register_op("gated_matmul", backend="naive")
+def _gated_compose(a, w_gate, w_up, *, policy, out_dtype, block):
+    """Unfused composition through the plain matmul dispatcher: the
+    xla/naive backends compute the same function with two GEMMs and an
+    HBM intermediate."""
+    g = matmul(a, w_gate, policy=policy, out_dtype=out_dtype)
+    u = matmul(a, w_up, policy=policy, out_dtype=out_dtype)
+    return (jax.nn.silu(g) * u).astype(out_dtype)
+
+
+@register_op("gated_matmul", backend="pallas")
+def _gated_pallas(a, w_gate, w_up, *, policy, out_dtype, block):
+    m, k = a.shape
+    n = w_gate.shape[1]
+    served = False
+    if block is None and policy.autotune == "cached":
+        block = _tcache.get_cache().get_gated(m, n, k, a.dtype, policy)
+        served = block is not None
+    itemsize = jnp.dtype(a.dtype).itemsize
+    if not _usable_block(block, served):
+        block = blocking.choose_block_config(m, n, k, itemsize, policy.chip,
+                                             n_rhs=2)
+    mp = _round_up(m, block.bm)
+    np_ = _round_up(n, block.bn)
+    kp = _round_up(k, block.bk)
+    out = _mm.gated_matmul_tiled(
+        _pad2(a, mp, kp), _pad2(w_gate, kp, np_), _pad2(w_up, kp, np_),
+        bm=block.bm, bn=block.bn, bk=block.bk,
+        out_dtype=out_dtype, interpret=policy.resolved_interpret)
     return out[:m, :n]
 
 
@@ -158,68 +230,105 @@ def gated_matmul(
     w_gate: jnp.ndarray,
     w_up: jnp.ndarray,
     *,
-    backend: str = "xla",
+    policy: Policy | None = None,
+    backend: str | None = None,        # deprecated string shim
     out_dtype=None,
     block: blocking.BlockConfig | None = None,
-    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    chip: hw.ChipSpec | None = None,
 ) -> jnp.ndarray:
     """silu(a @ w_gate) * (a @ w_up) — the SwiGLU hidden phase.
 
-    Pallas backends run the dual-GEMM kernel (one A stream, two weight
-    operands, zero HBM intermediates); xla/naive compose it unfused.
-    Tiles come from the gated autotuner cache entries or the n_rhs=2
-    static chooser (doubled B-side working set).
-    """
+    The pallas backend runs the dual-GEMM kernel (one A stream, two
+    weight operands, zero HBM intermediates); xla/naive compose it
+    unfused. Tiles come from the gated autotuner cache entries
+    (policy.autotune == "cached") or the n_rhs=2 static chooser."""
     assert a.ndim == w_gate.ndim == w_up.ndim == 2
-    m, k = a.shape
-    assert w_gate.shape == w_up.shape == (k, w_gate.shape[1])
-    n = w_gate.shape[1]
-    out_dtype = out_dtype or a.dtype
-
-    if backend == "xla" or backend.startswith("naive"):
-        g = matmul(a, w_gate, backend=backend, out_dtype=out_dtype,
-                   chip=chip)
-        u = matmul(a, w_up, backend=backend, out_dtype=out_dtype, chip=chip)
-        return (jax.nn.silu(g) * u).astype(out_dtype)
-
-    served = False
-    if backend.startswith("tuned"):
-        backend = resolve_tuned(backend)
-        if block is None:
-            block = _tcache.get_cache().get_gated(m, n, k, a.dtype, backend)
-            served = block is not None
-
-    interpret = backend.endswith("interpret")
-    itemsize = jnp.dtype(a.dtype).itemsize
-    if not _usable_block(block, served):
-        block = blocking.choose_block_config(m, n, k, itemsize, chip,
-                                             n_rhs=2)
-    mp = _round_up(m, block.bm)
-    np_ = _round_up(n, block.bn)
-    kp = _round_up(k, block.bk)
-    out = _mm.gated_matmul_tiled(
-        _pad2(a, mp, kp), _pad2(w_gate, kp, np_), _pad2(w_up, kp, np_),
-        bm=block.bm, bn=block.bn, bk=block.bk,
-        out_dtype=out_dtype, interpret=interpret)
-    return out[:m, :n]
+    assert w_gate.shape == w_up.shape == (a.shape[1], w_gate.shape[1])
+    pol = _policy.resolve(policy, backend)
+    if chip is not None and chip is not pol.chip:
+        pol = pol.replace(chip=chip)
+    out_dtype = out_dtype or pol.resolved_out_dtype(a.dtype)
+    impl = _registry.get_impl("gated_matmul", pol.backend)
+    return impl(a, w_gate, w_up, policy=pol, out_dtype=out_dtype,
+                block=block)
 
 
-def add(a, b, *, backend: str = "xla", interpret: bool | None = None):
-    """interpret=None derives interpreter mode from the backend string;
-    an explicit bool overrides it (e.g. force-interpret on CPU)."""
-    if backend == "xla":
-        return _ref.add_ref(a, b)
-    if interpret is None:
-        interpret = backend.endswith("interpret")
-    return _ew.binary_op(a, b, "add", interpret=interpret)
+# ----------------------------------------------------------------------
+# elementwise
+# ----------------------------------------------------------------------
+
+@register_op("add", backend="xla")
+def _add_xla(a, b, *, policy):
+    return _ref.add_ref(a, b)
 
 
-def sub(a, b, *, backend: str = "xla", interpret: bool | None = None):
-    if backend == "xla":
-        return _ref.sub_ref(a, b)
-    if interpret is None:
-        interpret = backend.endswith("interpret")
-    return _ew.binary_op(a, b, "sub", interpret=interpret)
+@register_op("add", backend="pallas")
+@register_op("add", backend="naive")
+def _add_pallas(a, b, *, policy):
+    return _ew.binary_op(a, b, "add", interpret=policy.resolved_interpret)
+
+
+@register_op("sub", backend="xla")
+def _sub_xla(a, b, *, policy):
+    return _ref.sub_ref(a, b)
+
+
+@register_op("sub", backend="pallas")
+@register_op("sub", backend="naive")
+def _sub_pallas(a, b, *, policy):
+    return _ew.binary_op(a, b, "sub", interpret=policy.resolved_interpret)
+
+
+def _elementwise(op, a, b, policy, backend, interpret):
+    pol = _policy.resolve(policy, backend)
+    if interpret is not None:
+        # explicit bool overrides the policy (e.g. force-interpret on
+        # CPU regardless of what the ambient policy says).
+        pol = pol.replace(interpret=interpret)
+    return _registry.get_impl(op, pol.backend)(a, b, policy=pol)
+
+
+def add(a, b, *, policy: Policy | None = None, backend: str | None = None,
+        interpret: bool | None = None):
+    return _elementwise("add", a, b, policy, backend, interpret)
+
+
+def sub(a, b, *, policy: Policy | None = None, backend: str | None = None,
+        interpret: bool | None = None):
+    return _elementwise("sub", a, b, policy, backend, interpret)
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@register_op("flash_attention", backend="xla")
+def _flash_xla(q, k, v, *, policy, causal, window, q_offset, bq, bk, block):
+    return _ref.attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+@register_op("flash_attention", backend="pallas")
+def _flash_pallas(q, k, v, *, policy, causal, window, q_offset, bq, bk,
+                  block):
+    b_, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    if jnp.asarray(q_offset).ndim == 1:
+        # per-batch offsets -> per-(batch*head) rows of the flat layout
+        q_offset = jnp.repeat(jnp.asarray(q_offset, jnp.int32), h)
+    if block is None and policy.autotune == "cached":
+        block = _tcache.get_cache().get_flash(tq, tk, d, q.dtype, policy)
+    if block is not None:
+        bq, bk = block.bq, block.bk
+    g = h // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b_ * h, tq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b_ * hkv, tk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b_ * hkv, tk, d)
+    o = _fa.flash_attention(
+        qf, kf, vf, group=g, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk,
+        interpret=policy.resolved_interpret)
+    return o.reshape(b_, h, tq, d).transpose(0, 2, 1, 3)
 
 
 def flash_attention(
@@ -230,32 +339,37 @@ def flash_attention(
     causal: bool = True,
     window: int | None = None,
     q_offset=0,                # scalar, or (B,) per-row vector (decode)
-    backend: str = "xla",
+    policy: Policy | None = None,
+    backend: str | None = None,        # deprecated string shim
     bq: int = 256,
     bk: int = 512,
     block: blocking.FlashBlockConfig | None = None,
 ) -> jnp.ndarray:
     """Layout-normalising wrapper: model code uses [B, T, H, D]."""
-    if backend == "xla":
-        return _ref.attention_ref(
-            q, k, v, causal=causal, window=window, q_offset=q_offset)
-    b_, tq, h, d = q.shape
-    _, tk, hkv, _ = k.shape
-    if jnp.asarray(q_offset).ndim == 1:
-        # per-batch offsets -> per-(batch*head) rows of the flat layout
-        q_offset = jnp.repeat(jnp.asarray(q_offset, jnp.int32), h)
-    if backend.startswith("tuned"):
-        backend = resolve_tuned(backend)
-        if block is None:
-            block = _tcache.get_cache().get_flash(tq, tk, d, q.dtype, backend)
-    if block is not None:
-        bq, bk = block.bq, block.bk
-    g = h // hkv
-    qf = q.transpose(0, 2, 1, 3).reshape(b_ * h, tq, d)
-    kf = k.transpose(0, 2, 1, 3).reshape(b_ * hkv, tk, d)
-    vf = v.transpose(0, 2, 1, 3).reshape(b_ * hkv, tk, d)
-    o = _fa.flash_attention(
-        qf, kf, vf, group=g, causal=causal, window=window,
-        q_offset=q_offset, bq=bq, bk=bk,
-        interpret=backend.endswith("interpret"))
-    return o.reshape(b_, h, tq, d).transpose(0, 2, 1, 3)
+    pol = _policy.resolve(policy, backend)
+    impl = _registry.get_impl("flash_attention", pol.backend)
+    return impl(q, k, v, policy=pol, causal=causal, window=window,
+                q_offset=q_offset, bq=bq, bk=bk, block=block)
+
+
+# ----------------------------------------------------------------------
+# compat shims — the ONLY layer that still interprets backend strings.
+# Everything below exists so pre-Policy call sites keep working; new
+# code constructs a Policy (core.policy) instead.
+# ----------------------------------------------------------------------
+
+#: Deprecated alias: the legacy string spellings `Policy.from_backend`
+#: accepts. Kept so old `choices=kops.MATMUL_BACKENDS` CLIs still run.
+MATMUL_BACKENDS = _policy.LEGACY_BACKEND_NAMES
+
+
+def resolve_tuned(backend: str) -> str:
+    """Deprecated: "tuned(_interpret)" executes the tiled kernel; the
+    typed equivalent is Policy.from_backend(backend).kernel_fingerprint
+    (cache entries stay keyed by execution backend so interpreter
+    timings never leak into compiled-TPU decisions)."""
+    _policy.warn_deprecated(
+        "resolve_tuned",
+        "kernels.ops.resolve_tuned is deprecated; use "
+        "Policy.from_backend(name).kernel_fingerprint")
+    return "pallas_interpret" if backend.endswith("interpret") else "pallas"

@@ -1,0 +1,59 @@
+"""Kernel registry: op-name × backend-name → implementation.
+
+Implementations self-register at import time:
+
+    @register_op("matmul", backend="pallas")
+    def _matmul_pallas(a, b, *, policy, ...): ...
+
+and the public dispatchers in kernels.ops become thin validated
+lookups instead of if/elif chains over backend strings. The registry is
+ALSO the single source of truth for "what exists": unknown op or
+backend names raise ValueError messages that list exactly the
+registered options, so adding a backend (a new @register_op call) is
+the whole change — no hand-maintained MATMUL_BACKENDS tuple, no N call
+sites to edit. (AttentionEngine's declarative op/template table is the
+model here; see ISSUE/PAPERS.md.)
+
+This module is a leaf on purpose — no jax, no repro imports — so both
+core.policy and kernels.ops can depend on it without cycles.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register_op(op: str, *, backend: str) -> Callable[[Callable], Callable]:
+    """Decorator: register `fn` as the implementation of `op` on
+    `backend`. Re-registration replaces (tests swap spies in)."""
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY.setdefault(op, {})[backend] = fn
+        return fn
+    return deco
+
+
+def get_impl(op: str, backend: str) -> Callable:
+    impls = _REGISTRY.get(op)
+    if impls is None:
+        raise ValueError(
+            f"unknown op {op!r}; registered ops: {registered_ops()}")
+    impl = impls.get(backend)
+    if impl is None:
+        raise ValueError(
+            f"op {op!r} has no backend {backend!r}; registered backends: "
+            f"{registered_backends(op)} (legacy spellings like "
+            "'tuned_interpret' map through Policy.from_backend)")
+    return impl
+
+
+def registered_ops() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def registered_backends(op: str) -> tuple:
+    if op not in _REGISTRY:
+        raise ValueError(
+            f"unknown op {op!r}; registered ops: {registered_ops()}")
+    return tuple(sorted(_REGISTRY[op]))

@@ -13,8 +13,9 @@ equal lengths — byte-compatible with the pre-engine driver):
 
 The engine (repro.serving) owns slot scheduling, per-slot prefill and
 the shared jitted serve_step with a per-slot `pos` vector; this module
-only builds a synthetic workload, sets the GEMM backend, and reports
-per-request latency plus aggregate throughput.
+only builds a synthetic workload, constructs the execution Policy from
+--backend/--autotune, and reports per-request latency plus aggregate
+throughput.
 """
 
 from __future__ import annotations
@@ -26,8 +27,8 @@ import numpy as np
 
 from repro import tuning
 from repro.configs import ARCH_NAMES, get_config
-from repro.core import gemm
-from repro.kernels import ops as kops
+from repro.core import policy as policy_mod
+from repro.core.policy import LEGACY_BACKEND_NAMES, Policy
 from repro.models import model as M
 from repro.serving import DEFAULT_PREFILL_CHUNK, ServingEngine, \
     make_sampler, synthetic_trace
@@ -87,21 +88,23 @@ def main(argv=None):
                     default="greedy")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=0)
-    ap.add_argument("--backend", choices=kops.MATMUL_BACKENDS, default="xla",
-                    help="GEMM backend for every dense contraction "
-                         "(tuned = autotuner-cached tiles)")
+    ap.add_argument("--backend", choices=LEGACY_BACKEND_NAMES, default="xla",
+                    help="GEMM backend for every dense contraction; "
+                         "constructs the engine's execution Policy "
+                         "(tuned = pallas with autotuner-cached tiles)")
     ap.add_argument("--autotune", action="store_true",
                     help="tune uncached GEMM shapes at startup")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    gemm.set_default_backend(args.backend)
+    policy = Policy.from_backend(args.backend)
+    policy_mod.set_default_policy(policy)
     rng = np.random.default_rng(args.seed)
     work = build_workload(cfg, args, rng)
 
     max_slots = args.max_slots or (args.batch if not args.requests else 4)
     max_len = max(len(p) + g for p, g, _, _ in work)
-    if args.backend.startswith("tuned") or args.autotune:
+    if policy.autotune == "cached" or args.autotune:
         # Warm the cache for the shapes the engine actually executes:
         # admission prefill runs at batch 1 over chunk-bucketed prompt
         # lengths plus one-token remainder steps (engine.prefill_chunk
@@ -109,12 +112,11 @@ def main(argv=None):
         chunk = DEFAULT_PREFILL_CHUNK
         buckets = sorted({(len(p) - len(p) % chunk) or len(p)
                           for p, _, _, _ in work} | {1})
-        backend = (kops.resolve_tuned(args.backend)
-                   if args.backend.startswith("tuned") else None)
-        rep = tuning.warm_start(cfg, 1, buckets, backend=backend,
+        wpol = policy if policy.autotune == "cached" else None
+        rep = tuning.warm_start(cfg, 1, buckets, policy=wpol,
                                 autotune=args.autotune)
         print(tuning.describe_warm_start(rep))
-        rep = tuning.warm_start(cfg, max_slots, 1, backend=backend,
+        rep = tuning.warm_start(cfg, max_slots, 1, policy=wpol,
                                 autotune=args.autotune)
         print(tuning.describe_warm_start(rep))
 
@@ -122,7 +124,7 @@ def main(argv=None):
     sampler = make_sampler(args.sampler, temperature=args.temperature,
                            top_k=args.top_k, seed=args.seed)
     engine = ServingEngine(cfg, params, max_slots=max_slots,
-                           max_len=max_len, sampler=sampler)
+                           max_len=max_len, sampler=sampler, policy=policy)
     requests = [engine.submit(p, g, arrival_time=t, enc_frames=enc)
                 for p, g, t, enc in work]
     report = engine.run()

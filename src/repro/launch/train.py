@@ -21,8 +21,8 @@ import jax.numpy as jnp
 from repro import tuning
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import ARCH_NAMES, get_config
-from repro.core import gemm
-from repro.kernels import ops as kops
+from repro.core import policy as policy_mod
+from repro.core.policy import LEGACY_BACKEND_NAMES, Policy
 from repro.data.pipeline import SyntheticLM
 from repro.distributed import sharding as shard_rules
 from repro.distributed.context import mesh_context
@@ -34,16 +34,16 @@ from repro.training import train_loop as TL
 
 def build(args):
     cfg = get_config(args.arch, reduced=args.reduced)
-    gemm.set_default_backend(args.backend)
-    if args.backend.startswith("tuned") or args.autotune:
+    policy = Policy.from_backend(args.backend)
+    policy_mod.set_default_policy(policy)
+    if policy.autotune == "cached" or args.autotune:
         # Warm the autotuner cache before init/jit so tuned tiles are
         # baked into the compiled train step (both fwd and the VJP
-        # GEMMs route through the same chokepoint), keyed by the exec
-        # backend the runtime lookup will resolve to.
+        # GEMMs route through the same chokepoint), keyed by the
+        # policy the runtime lookup will resolve to.
         rep = tuning.warm_start(
             cfg, args.batch, args.seq,
-            backend=kops.resolve_tuned(args.backend)
-            if args.backend.startswith("tuned") else None,
+            policy=policy if policy.autotune == "cached" else None,
             autotune=args.autotune, backward=True)
         print(tuning.describe_warm_start(rep))
     mesh = mesh_lib.make_host_mesh(args.model_parallel)
@@ -74,9 +74,10 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1)
-    ap.add_argument("--backend", choices=kops.MATMUL_BACKENDS, default="xla",
-                    help="GEMM backend for every dense contraction "
-                         "(tuned = autotuner-cached tiles)")
+    ap.add_argument("--backend", choices=LEGACY_BACKEND_NAMES, default="xla",
+                    help="GEMM backend for every dense contraction; "
+                         "constructs the run's execution Policy "
+                         "(tuned = pallas with autotuner-cached tiles)")
     ap.add_argument("--autotune", action="store_true",
                     help="tune uncached GEMM shapes at startup")
     ap.add_argument("--compress", action="store_true",

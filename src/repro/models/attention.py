@@ -17,6 +17,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import policy as _pol
+from repro.core.policy import Policy
 from repro.distributed.context import constrain, current_mesh
 from repro.kernels import ops as kops
 from repro.models import layers as L
@@ -119,8 +121,23 @@ def chunked_attention(
     return out.astype(q.dtype)
 
 
+def _resolve_attn_policy(policy, backend) -> Policy:
+    """Attention keeps an explicit opt-in contract: the flash kernel is
+    forward-only (no VJP) and requires the full kv to be valid, so the
+    default here is the XLA online-softmax path — NOT the ambient GEMM
+    policy. Callers that want the kernel pass a policy (or, deprecated,
+    a legacy backend string) explicitly."""
+    if policy is None and backend is None:
+        return _XLA_POLICY
+    return _pol.resolve(policy, backend)
+
+
+_XLA_POLICY = Policy()
+
+
 def attend(q, k, v, *, causal, window, chunk, q_offset=0, kv_len=None,
-           backend: str = "xla", io_dtype=jnp.float32):
+           policy: Policy | None = None, backend: str | None = None,
+           io_dtype=jnp.float32):
     """Backend mux. The Pallas kernel streams q_offset (scalar or per-row
     vector) as data but still requires the full kv to be valid.
 
@@ -130,10 +147,11 @@ def attend(q, k, v, *, causal, window, chunk, q_offset=0, kv_len=None,
     same math, validated in interpret mode) whose intermediates never
     touch HBM. §Perf models that substitution from the tag.
     """
-    if backend != "xla" and kv_len is None:
+    pol = _resolve_attn_policy(policy, backend)
+    if pol.backend != "xla" and kv_len is None:
         return kops.flash_attention(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
-            backend=backend)
+            policy=pol)
     with jax.named_scope("flashsite"):
         return chunked_attention(
             q, k, v, causal=causal, window=window, chunk=chunk,
@@ -193,9 +211,15 @@ def attn_apply(
                                    # vector (decode; pos < 0 = inactive slot,
                                    # cache row left untouched)
     enc_kv: Optional[tuple] = None,  # cross-attn: precomputed (k, v)
-    backend: str = "xla",
+    policy: Optional[Policy] = None,
+    backend: Optional[str] = None,   # deprecated string shim
 ):
-    """Returns (out, new_cache). new_cache is None unless cache given."""
+    """Returns (out, new_cache). new_cache is None unless cache given.
+
+    Kernel selection for the no-cache paths comes from `policy` (or the
+    deprecated `backend` string); cached decode always runs the XLA
+    masked path (see _resolve_attn_policy)."""
+    pol = _resolve_attn_policy(policy, backend)
     b, t, _ = x.shape
     dh = cfg.resolved_head_dim
     use_rope = cfg.use_rope if use_rope is None else use_rope
@@ -210,7 +234,7 @@ def attn_apply(
     if enc_kv is not None:                      # cross attention
         k, v = enc_kv
         out = attend(q, k, v, causal=False, window=None,
-                     chunk=cfg.attn_chunk, backend=backend,
+                     chunk=cfg.attn_chunk, policy=pol,
                      io_dtype=io_dtype)
         out = out.reshape(b, t, cfg.n_heads * dh)
         return L.dense_apply(p["wo"], out), None
@@ -244,7 +268,7 @@ def attn_apply(
         # Per-row masks subsume the SWA fast path (window via mask).
         out = attend(q, ck, cv, causal=True, window=cfg.window,
                      chunk=cfg.attn_chunk, q_offset=pos,
-                     kv_len=pos + 1, backend="xla", io_dtype=io_dtype)
+                     kv_len=pos + 1, io_dtype=io_dtype)
     elif cache is not None:
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
                                                  k.astype(cache["k"].dtype),
@@ -263,15 +287,14 @@ def attn_apply(
                          chunk=cfg.attn_chunk,
                          kv_len=jnp.minimum(cache_pos + 1 - start,
                                             cfg.window),
-                         backend="xla", io_dtype=io_dtype)
+                         io_dtype=io_dtype)
         else:
             out = attend(q, ck, cv, causal=True, window=cfg.window,
                          chunk=cfg.attn_chunk, q_offset=cache_pos,
-                         kv_len=cache_pos + t, backend="xla",
-                         io_dtype=io_dtype)
+                         kv_len=cache_pos + t, io_dtype=io_dtype)
     else:
         out = attend(q, k, v, causal=causal, window=cfg.window,
-                     chunk=cfg.attn_chunk, backend=backend,
+                     chunk=cfg.attn_chunk, policy=pol,
                      io_dtype=io_dtype)
 
     out = out.reshape(b, t, cfg.n_heads * dh)

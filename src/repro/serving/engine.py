@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import policy as _pol
 from repro.models import model as M
 from repro.serving.request import FINISHED, Request, percentile
 from repro.serving.sampler import Sampler
@@ -66,8 +67,13 @@ class ServingEngine:
     def __init__(self, cfg, params, *, max_slots: int, max_len: int,
                  sampler: Optional[Sampler] = None,
                  prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, policy=None):
         self.cfg = cfg
+        # Execution policy for every jitted step this engine compiles —
+        # captured once at construction (explicit arg > ambient default)
+        # so a later ambient change can never retrace a live engine
+        # under different kernels.
+        self.policy = _pol.resolve(policy)
         self.params = params
         self.max_slots = max_slots
         # chunked_attention requires kv lengths beyond attn_chunk to be
@@ -88,8 +94,10 @@ class ServingEngine:
             _slot_axis(b.shape, s.shape)
             for b, s in zip(big_leaves, jax.tree.leaves(small))]
 
-        self._prefill = jax.jit(TL.make_prefill(cfg), donate_argnums=(2,))
-        self._step = jax.jit(TL.make_serve_step(cfg), donate_argnums=(3,))
+        self._prefill = jax.jit(TL.make_prefill(cfg, policy=self.policy),
+                                donate_argnums=(2,))
+        self._step = jax.jit(TL.make_serve_step(cfg, policy=self.policy),
+                             donate_argnums=(3,))
         self._write = jax.jit(self._write_slot, donate_argnums=(0,))
 
         # per-slot device-mirrored state (pos < 0 = inactive slot)

@@ -26,6 +26,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import policy as _pol
 from repro.distributed import compression as comp
 from repro.models import model as M
 from repro.optim.adamw import AdamW, AdamWState
@@ -55,11 +56,17 @@ def _split_microbatches(batch, accum: int):
 
 
 def make_train_step(cfg, optimizer: AdamW, *, accum: int = 1,
-                    compress: bool = False):
+                    compress: bool = False, policy=None):
+    """`policy` (default: the ambient core.policy default at factory
+    time) is pinned into the returned step: the function body enters
+    policy.scope() during tracing, so every GEMM the model and its VJP
+    emit — across retraces — executes under the same policy."""
+    policy = _pol.resolve(policy)
+
     def loss_fn(params, mb):
         return M.loss_fn(cfg, params, mb)
 
-    def train_step(state: TrainState, batch):
+    def _train_step(state: TrainState, batch):
         if accum == 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(state.params, batch)
@@ -92,18 +99,28 @@ def make_train_step(cfg, optimizer: AdamW, *, accum: int = 1,
         metrics["loss"] = loss
         return TrainState(params, opt, ef), metrics
 
+    def train_step(state: TrainState, batch):
+        with policy.scope():            # trace-time: pins the policy
+            return _train_step(state, batch)
+
     return train_step
 
 
-def make_serve_step(cfg):
+def make_serve_step(cfg, *, policy=None):
+    policy = _pol.resolve(policy)
+
     def serve_step(params, token, pos, cache):
         # pos: scalar (uniform batch) or (B,) int32 per-slot vector —
         # threaded straight through to the per-slot cache writes.
-        return M.decode_step(cfg, params, token, pos, cache)
+        with policy.scope():            # trace-time: pins the policy
+            return M.decode_step(cfg, params, token, pos, cache)
     return serve_step
 
 
-def make_prefill(cfg):
+def make_prefill(cfg, *, policy=None):
+    policy = _pol.resolve(policy)
+
     def prefill_fn(params, batch, cache):
-        return M.prefill(cfg, params, batch, cache)
+        with policy.scope():            # trace-time: pins the policy
+            return M.prefill(cfg, params, batch, cache)
     return prefill_fn

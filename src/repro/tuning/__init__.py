@@ -18,7 +18,8 @@ from repro.tuning.space import (flash_candidates, gated_matmul_candidates,
                                 matmul_candidates)
 from repro.tuning.timing import time_jax
 
-_LAZY = ("TuneResult", "default_exec_backend", "describe_warm_start",
+_LAZY = ("TuneResult", "default_exec_backend", "default_exec_policy",
+         "describe_warm_start",
          "model_gemm_shapes", "tune_flash_attention", "tune_gated_matmul",
          "tune_matmul", "warm_start")
 

@@ -23,26 +23,43 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import hw
+from repro.core import policy as _pol
 from repro.core.blocking import BlockConfig, FlashBlockConfig
+from repro.core.policy import Policy
 from repro.kernels import ops as _ops
 from repro.tuning import space as _space
 from repro.tuning.cache import TuningCache, get_cache
 from repro.tuning.timing import time_jax
 
 
+def default_exec_policy() -> Policy:
+    """The Pallas execution policy timings are valid for on this host:
+    compiled on a real TPU, interpreter otherwise (interpret=None is
+    exactly that auto rule). Interpret-mode timings exercise the full
+    mechanism but are not TPU wall-clock — the cache-key fingerprint
+    keeps the two populations apart."""
+    return Policy(backend="pallas")
+
+
 def default_exec_backend() -> str:
-    """The Pallas execution backend timings are valid for on this host:
-    compiled on a real TPU, interpreter otherwise. Interpret-mode
-    timings exercise the full mechanism but are not TPU wall-clock —
-    the fingerprint keeps the two populations apart."""
-    return "pallas" if jax.devices()[0].platform == "tpu" else "pallas_interpret"
+    """Deprecated string twin of default_exec_policy() (its
+    kernel_fingerprint), kept for pre-Policy callers."""
+    return default_exec_policy().kernel_fingerprint
+
+
+def _exec_policy(policy, backend) -> Policy:
+    """Explicit policy > deprecated backend string > this host's
+    default execution policy."""
+    if policy is None and backend is None:
+        return default_exec_policy()
+    return _pol.resolve(policy, backend)
 
 
 @dataclasses.dataclass(frozen=True)
 class TuneResult:
     op: str                      # "matmul" | "flash"
     key: str                     # cache key the winner was stored under
-    backend: str
+    backend: str                 # policy.kernel_fingerprint the sweep ran on
     best: object                 # BlockConfig | FlashBlockConfig
     best_s: float
     baseline: object             # the static chooser's config
@@ -107,9 +124,10 @@ def tune_matmul(
     dtype="float32",
     *,
     epilogue: str = "none",
-    backend: str | None = None,
+    policy: Policy | None = None,
+    backend: str | None = None,         # deprecated string shim
     cache: TuningCache | None = None,
-    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    chip: hw.ChipSpec | None = None,
     warmup: int = 1,
     iters: int = 3,
     max_candidates: int | None = None,
@@ -121,10 +139,14 @@ def tune_matmul(
     `epilogue` times the fused-flush variant (bias / bias_gelu /
     bias_silu / residual) with synthetic epilogue operands — the extra
     operand DMA and VPU work shift the optimum, so each variant gets
-    its own cache entry (tuning.cache.matmul_key)."""
-    backend = backend or default_exec_backend()
+    its own cache entry (tuning.cache.matmul_key — keyed by the
+    policy's kernel fingerprint)."""
+    pol = _exec_policy(policy, backend)
+    if chip is not None:        # explicit kwarg overrides the policy's chip
+        pol = pol.replace(chip=chip)
+    chip = pol.chip
     cache = cache or get_cache()
-    interpret = backend.endswith("interpret")
+    interpret = pol.resolved_interpret
     rng = np.random.default_rng(seed)
     if np.dtype(dtype) == np.complex64:
         raise ValueError("tune the underlying real GEMMs (core.gemm "
@@ -150,12 +172,12 @@ def tune_matmul(
         _space.matmul_candidates(m, n, k, itemsize, chip=chip,
                                  max_candidates=max_candidates),
         lambda cfg: _timer(lambda x, y, *e, c=cfg: _ops.matmul(
-            x, y, backend=backend, block=c, chip=chip, epilogue=epilogue,
+            x, y, policy=pol, block=c, epilogue=epilogue,
             **({ep_name: e[0]} if ep_name else {})),
             args, interpret, warmup, iters),
-        lambda cfg, meta: cache.put_matmul(m, n, k, dtype, backend, cfg,
+        lambda cfg, meta: cache.put_matmul(m, n, k, dtype, pol, cfg,
                                            epilogue=epilogue, **meta),
-        cache, save, backend)
+        cache, save, pol.kernel_fingerprint)
 
 
 def tune_gated_matmul(
@@ -164,9 +186,10 @@ def tune_gated_matmul(
     k: int,
     dtype="float32",
     *,
-    backend: str | None = None,
+    policy: Policy | None = None,
+    backend: str | None = None,         # deprecated string shim
     cache: TuningCache | None = None,
-    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    chip: hw.ChipSpec | None = None,
     warmup: int = 1,
     iters: int = 3,
     max_candidates: int | None = None,
@@ -176,9 +199,12 @@ def tune_gated_matmul(
     """Sweep tiles for the dual-GEMM SwiGLU kernel and cache the winner
     (the doubled B-side working set makes its optimum distinct from the
     plain GEMM's)."""
-    backend = backend or default_exec_backend()
+    pol = _exec_policy(policy, backend)
+    if chip is not None:        # explicit kwarg overrides the policy's chip
+        pol = pol.replace(chip=chip)
+    chip = pol.chip
     cache = cache or get_cache()
-    interpret = backend.endswith("interpret")
+    interpret = pol.resolved_interpret
     rng = np.random.default_rng(seed)
     a = jnp.asarray(rng.normal(size=(m, k)), dtype)
     wg = jnp.asarray(rng.normal(size=(k, n)), dtype)
@@ -190,11 +216,11 @@ def tune_gated_matmul(
         _space.gated_matmul_candidates(m, n, k, itemsize, chip=chip,
                                        max_candidates=max_candidates),
         lambda cfg: _timer(lambda x, g, u, c=cfg: _ops.gated_matmul(
-            x, g, u, backend=backend, block=c, chip=chip),
+            x, g, u, policy=pol, block=c),
             (a, wg, wu), interpret, warmup, iters),
-        lambda cfg, meta: cache.put_gated(m, n, k, dtype, backend, cfg,
+        lambda cfg, meta: cache.put_gated(m, n, k, dtype, pol, cfg,
                                           **meta),
-        cache, save, backend)
+        cache, save, pol.kernel_fingerprint)
 
 
 def tune_flash_attention(
@@ -205,9 +231,10 @@ def tune_flash_attention(
     *,
     heads: int = 1,
     causal: bool = True,
-    backend: str | None = None,
+    policy: Policy | None = None,
+    backend: str | None = None,         # deprecated string shim
     cache: TuningCache | None = None,
-    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    chip: hw.ChipSpec | None = None,
     warmup: int = 1,
     iters: int = 3,
     max_candidates: int | None = None,
@@ -215,9 +242,12 @@ def tune_flash_attention(
     seed: int = 0,
 ) -> TuneResult:
     """Sweep (bq, bk) flash-attention tiles for one shape; cache winner."""
-    backend = backend or default_exec_backend()
+    pol = _exec_policy(policy, backend)
+    if chip is not None:        # explicit kwarg overrides the policy's chip
+        pol = pol.replace(chip=chip)
+    chip = pol.chip
     cache = cache or get_cache()
-    interpret = backend.endswith("interpret")
+    interpret = pol.resolved_interpret
     rng = np.random.default_rng(seed)
     q = jnp.asarray(rng.normal(size=(1, tq, heads, d)), dtype)
     kv = jnp.asarray(rng.normal(size=(1, tk, heads, d)), dtype)
@@ -228,11 +258,11 @@ def tune_flash_attention(
         _space.flash_candidates(tq, tk, d, itemsize, chip=chip,
                                 max_candidates=max_candidates),
         lambda cfg: _timer(lambda x, y, c=cfg: _ops.flash_attention(
-            x, y, y, causal=causal, backend=backend, block=c),
+            x, y, y, causal=causal, policy=pol, block=c),
             (q, kv), interpret, warmup, iters),
-        lambda cfg, meta: cache.put_flash(tq, tk, d, dtype, backend, cfg,
+        lambda cfg, meta: cache.put_flash(tq, tk, d, dtype, pol, cfg,
                                           **meta),
-        cache, save, backend)
+        cache, save, pol.kernel_fingerprint)
 
 
 def model_gemm_shapes(cfg, batch: int, seq: int,
@@ -285,7 +315,8 @@ def warm_start(
     batch: int,
     seq,
     *,
-    backend: str | None = None,
+    policy: Policy | None = None,
+    backend: str | None = None,         # deprecated string shim
     autotune: bool = False,
     backward: bool = False,
     cache: TuningCache | None = None,
@@ -302,8 +333,12 @@ def warm_start(
     serving never blocks on a sweep. With autotune=True the misses are
     tuned and persisted before the first step; a shape whose sweep
     fails outright is reported under "failed" and left to the fallback.
+
+    `policy` is the execution policy whose kernel fingerprint keys the
+    cache entries (launchers pass the policy they will run under;
+    default: this host's execution policy).
     """
-    backend = backend or default_exec_backend()
+    pol = _exec_policy(policy, backend)
     cache = cache or get_cache()
     dtype = getattr(cfg, "dtype", "float32")
     seqs = (seq,) if isinstance(seq, int) else tuple(seq)
@@ -314,22 +349,22 @@ def warm_start(
     for entry in shapes:
         op, m, n, k, ep = entry
         if op == "gated":
-            hit = cache.get_gated(m, n, k, dtype, backend) is not None
+            hit = cache.get_gated(m, n, k, dtype, pol) is not None
         else:
-            hit = cache.get_matmul(m, n, k, dtype, backend,
+            hit = cache.get_matmul(m, n, k, dtype, pol,
                                    epilogue=ep) is not None
         if hit:
             hits.append(entry)
         elif autotune:
             try:
                 if op == "gated":
-                    tune_gated_matmul(m, n, k, dtype, backend=backend,
+                    tune_gated_matmul(m, n, k, dtype, policy=pol,
                                       cache=cache, iters=iters,
                                       max_candidates=max_candidates,
                                       save=False)
                 else:
                     tune_matmul(m, n, k, dtype, epilogue=ep,
-                                backend=backend, cache=cache, iters=iters,
+                                policy=pol, cache=cache, iters=iters,
                                 max_candidates=max_candidates, save=False)
                 tuned.append(entry)
             except RuntimeError:  # every candidate failed: use fallback
@@ -341,7 +376,8 @@ def warm_start(
     return {
         "path": cache.path,
         "fingerprint": cache.fingerprint,
-        "backend": backend,
+        "backend": pol.kernel_fingerprint,
+        "policy": pol.fingerprint(),
         "hits": hits,
         "misses": misses,
         "tuned": tuned,

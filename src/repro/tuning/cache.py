@@ -51,25 +51,39 @@ def default_cache_path() -> str:
     return os.path.expanduser(os.environ.get(CACHE_ENV_VAR, DEFAULT_CACHE_PATH))
 
 
-def matmul_key(m: int, n: int, k: int, dtype, backend: str,
+def _backend_tag(backend) -> str:
+    """Key component naming the execution backend. Accepts a
+    core.policy.Policy (preferred — the tag is its kernel_fingerprint,
+    i.e. the execution-relevant backend+interpret fields) or a legacy
+    string. The fingerprint of a Policy matches the historical string
+    spellings ("pallas", "pallas_interpret"), so caches written before
+    the Policy refactor keep serving."""
+    fp = getattr(backend, "kernel_fingerprint", backend)
+    if not isinstance(fp, str):
+        raise TypeError(f"expected Policy or backend string, got "
+                        f"{type(backend)}")
+    return fp
+
+
+def matmul_key(m: int, n: int, k: int, dtype, backend,
                epilogue: str = "none") -> str:
     """Fused-epilogue variants are keyed separately: the extra flush-
     phase operand DMA and VPU work shift the optimal tile, so a winner
     tuned for the plain GEMM must not be served to e.g. bias_silu.
     epilogue="none" keeps the historical key so old caches stay valid."""
-    key = f"matmul|{m}x{n}x{k}|{np.dtype(dtype).name}|{backend}"
+    key = f"matmul|{m}x{n}x{k}|{np.dtype(dtype).name}|{_backend_tag(backend)}"
     if epilogue not in (None, "none"):
         key += f"|{epilogue}"
     return key
 
 
-def gated_key(m: int, n: int, k: int, dtype, backend: str) -> str:
+def gated_key(m: int, n: int, k: int, dtype, backend) -> str:
     """The dual-GEMM SwiGLU kernel: (m, k) x 2*(k, n) -> (m, n)."""
-    return f"gated|{m}x{n}x{k}|{np.dtype(dtype).name}|{backend}"
+    return f"gated|{m}x{n}x{k}|{np.dtype(dtype).name}|{_backend_tag(backend)}"
 
 
-def flash_key(tq: int, tk: int, d: int, dtype, backend: str) -> str:
-    return f"flash|{tq}x{tk}xd{d}|{np.dtype(dtype).name}|{backend}"
+def flash_key(tq: int, tk: int, d: int, dtype, backend) -> str:
+    return f"flash|{tq}x{tk}xd{d}|{np.dtype(dtype).name}|{_backend_tag(backend)}"
 
 
 class TuningCache:
@@ -147,14 +161,14 @@ class TuningCache:
         self._entries[key] = dict(entry)
 
     # --- typed accessors -------------------------------------------------
-    def get_matmul(self, m: int, n: int, k: int, dtype, backend: str,
+    def get_matmul(self, m: int, n: int, k: int, dtype, backend,
                    epilogue: str = "none") -> Optional[BlockConfig]:
         e = self.get(matmul_key(m, n, k, dtype, backend, epilogue))
         if e is None:
             return None
         return BlockConfig(bm=int(e["bm"]), bn=int(e["bn"]), bk=int(e["bk"]))
 
-    def put_matmul(self, m: int, n: int, k: int, dtype, backend: str,
+    def put_matmul(self, m: int, n: int, k: int, dtype, backend,
                    cfg: BlockConfig, *, epilogue: str = "none",
                    **meta: Any) -> str:
         key = matmul_key(m, n, k, dtype, backend, epilogue)
@@ -163,13 +177,13 @@ class TuningCache:
         return key
 
     def get_gated(self, m: int, n: int, k: int, dtype,
-                  backend: str) -> Optional[BlockConfig]:
+                  backend) -> Optional[BlockConfig]:
         e = self.get(gated_key(m, n, k, dtype, backend))
         if e is None:
             return None
         return BlockConfig(bm=int(e["bm"]), bn=int(e["bn"]), bk=int(e["bk"]))
 
-    def put_gated(self, m: int, n: int, k: int, dtype, backend: str,
+    def put_gated(self, m: int, n: int, k: int, dtype, backend,
                   cfg: BlockConfig, **meta: Any) -> str:
         key = gated_key(m, n, k, dtype, backend)
         self.put(key, {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk,
@@ -177,13 +191,13 @@ class TuningCache:
         return key
 
     def get_flash(self, tq: int, tk: int, d: int, dtype,
-                  backend: str) -> Optional[FlashBlockConfig]:
+                  backend) -> Optional[FlashBlockConfig]:
         e = self.get(flash_key(tq, tk, d, dtype, backend))
         if e is None:
             return None
         return FlashBlockConfig(bq=int(e["bq"]), bk=int(e["bk"]))
 
-    def put_flash(self, tq: int, tk: int, d: int, dtype, backend: str,
+    def put_flash(self, tq: int, tk: int, d: int, dtype, backend,
                   cfg: FlashBlockConfig, **meta: Any) -> str:
         key = flash_key(tq, tk, d, dtype, backend)
         self.put(key, {"bq": cfg.bq, "bk": cfg.bk, "tuned_at": _now(), **meta})

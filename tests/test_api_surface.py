@@ -1,0 +1,43 @@
+"""Public-API covenant: `repro.__all__` must match the checked-in
+snapshot (tests/api_surface.txt) and every name must resolve.
+
+An intentional API change edits the snapshot file in the same PR — the
+diff IS the review artifact. An accidental one fails here before it
+ships."""
+
+import os
+
+import pytest
+
+import repro
+
+SNAPSHOT = os.path.join(os.path.dirname(__file__), "api_surface.txt")
+
+
+def _snapshot_names():
+    with open(SNAPSHOT) as f:
+        return [ln.strip() for ln in f
+                if ln.strip() and not ln.startswith("#")]
+
+
+def test_all_matches_snapshot():
+    expected = _snapshot_names()
+    assert sorted(repro.__all__) == sorted(expected), (
+        "repro.__all__ drifted from tests/api_surface.txt — if the "
+        "change is intentional, update the snapshot in this PR")
+
+
+def test_all_is_sorted_and_unique():
+    assert list(repro.__all__) == sorted(set(repro.__all__))
+
+
+@pytest.mark.parametrize("name", _snapshot_names())
+def test_every_export_resolves(name):
+    assert getattr(repro, name) is not None
+
+
+def test_facade_is_lazy():
+    """`import repro` must not drag jax in (fresh-interpreter check is
+    CI's quickstart step; here we at least pin the lazy-export map)."""
+    import repro as r
+    assert set(r._EXPORTS) <= set(r.__all__)

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core import gemm
+from repro.core.policy import Policy
 from repro.core.blocking import BlockConfig
 from repro.kernels import ops
 from repro.kernels.matmul import EPILOGUES, matmul_tiled
@@ -185,13 +186,17 @@ def test_f64_routes_unfused():
     """f64 has no MXU path: the fusibility gate must exclude it (the
     interpret-mode f64 end-to-end run lives in test_kernels_matmul's
     x64 subprocess)."""
-    assert not gemm._fusible(jnp.float64, "pallas")
-    assert not gemm._fusible(jnp.float64, "pallas_interpret")
-    assert not gemm._fusible(jnp.complex64, "tuned")
-    assert gemm._fusible(jnp.float32, "pallas_interpret")
-    assert gemm._fusible(jnp.bfloat16, "tuned")
-    assert not gemm._fusible(jnp.float32, "xla")
-    assert not gemm._fusible(jnp.float32, "naive")
+    P = Policy.from_backend
+    assert not gemm._fusible(jnp.float64, P("pallas"))
+    assert not gemm._fusible(jnp.float64, P("pallas_interpret"))
+    assert not gemm._fusible(jnp.complex64, P("tuned"))
+    assert gemm._fusible(jnp.float32, P("pallas_interpret"))
+    assert gemm._fusible(jnp.bfloat16, P("tuned"))
+    assert not gemm._fusible(jnp.float32, P("xla"))
+    assert not gemm._fusible(jnp.float32, P("naive"))
+    # the policy toggle gates fusion too
+    assert not gemm._fusible(
+        jnp.float32, P("pallas_interpret").replace(fuse_epilogues=False))
 
 
 def test_clamped_block_revalidates():

@@ -1,0 +1,277 @@
+"""Policy semantics: scope nesting, jit static-arg hashability,
+deprecation shims, VJP policy inheritance, interpret unification, and
+registry validation errors — the contracts ISSUE 4 pins."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gemm
+from repro.core import policy as pol_mod
+from repro.core.policy import Policy, current_policy, set_default_policy
+from repro.kernels import ops, registry
+
+
+@pytest.fixture
+def a32():
+    rng = np.random.default_rng(7)
+    return jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+
+
+@pytest.fixture(autouse=True)
+def _clean_ambient():
+    """Each test starts from the built-in xla default."""
+    set_default_policy(None)
+    yield
+    set_default_policy(None)
+
+
+# ----------------------------------------------------------------------
+# scope nesting / restoration
+# ----------------------------------------------------------------------
+
+def test_scope_nesting_and_restoration():
+    base = current_policy()
+    p1 = Policy(backend="pallas", interpret=True)
+    p2 = Policy(backend="naive", interpret=True)
+    with p1.scope():
+        assert current_policy() is p1
+        with p2.scope():
+            assert current_policy() is p2
+        assert current_policy() is p1
+    assert current_policy() == base
+
+
+def test_scope_restores_on_exception():
+    p1 = Policy(backend="pallas", interpret=True)
+    with pytest.raises(RuntimeError):
+        with p1.scope():
+            raise RuntimeError("boom")
+    assert current_policy().backend == "xla"
+
+
+def test_set_default_policy_vs_scope_precedence():
+    default = Policy(backend="naive", interpret=True)
+    set_default_policy(default)
+    assert current_policy() is default
+    inner = Policy(backend="pallas", interpret=True)
+    with inner.scope():
+        assert current_policy() is inner
+    assert current_policy() is default
+    set_default_policy(None)
+    assert current_policy().backend == "xla"
+
+
+def test_env_var_override(monkeypatch):
+    monkeypatch.setenv(pol_mod.ENV_VAR,
+                       "backend=pallas,interpret=true,autotune=cached")
+    p = current_policy()
+    assert (p.backend, p.interpret, p.autotune) == ("pallas", True, "cached")
+    # legacy spelling parses too
+    monkeypatch.setenv(pol_mod.ENV_VAR, "tuned_interpret")
+    p = current_policy()
+    assert (p.backend, p.interpret, p.autotune) == ("pallas", True, "cached")
+    # explicit default outranks the env var
+    set_default_policy(Policy())
+    assert current_policy().backend == "xla"
+
+
+def test_fingerprint_roundtrip():
+    p = Policy(backend="pallas", interpret=True, autotune="cached",
+               fuse_epilogues=False, out_dtype="bfloat16")
+    assert Policy.parse(p.fingerprint()) == p
+    assert Policy.parse(Policy().fingerprint()) == Policy()
+
+
+# ----------------------------------------------------------------------
+# hashability / jit static-arg behaviour
+# ----------------------------------------------------------------------
+
+def test_policy_hashable_and_jit_static(a32):
+    traces = []
+    f = jax.jit(lambda x, policy: (traces.append(policy),
+                                   gemm.matmul(x, x, policy=policy))[1],
+                static_argnames=("policy",))
+    p = Policy(backend="pallas", interpret=True)
+    y1 = f(a32, policy=p)
+    n = len(traces)
+    # identical policy (equal, fresh instance): no retrace
+    f(a32, policy=Policy(backend="pallas", interpret=True))
+    assert len(traces) == n
+    # changed policy: exactly one new trace
+    f(a32, policy=Policy(backend="naive", interpret=True))
+    assert len(traces) == n + 1
+    np.testing.assert_allclose(
+        y1, gemm.matmul(a32, a32, policy=Policy()), rtol=1e-5)
+
+
+def test_policy_as_nondiff_vjp_arg(a32):
+    p = Policy(backend="pallas", interpret=True)
+    g = jax.grad(lambda x: jnp.sum(gemm.matmul(x, a32, policy=p) ** 2))(a32)
+    g_ref = jax.grad(lambda x: jnp.sum(gemm.matmul(x, a32) ** 2))(a32)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# interpret unification: one source of truth
+# ----------------------------------------------------------------------
+
+def test_resolved_interpret_auto_off_tpu():
+    # this suite runs on CPU: interpret=None must NEVER mean "compile"
+    assert jax.devices()[0].platform != "tpu"
+    assert Policy(backend="pallas").resolved_interpret is True
+    assert Policy(backend="pallas", interpret=False).resolved_interpret \
+        is False
+
+
+def test_pallas_scope_never_silently_compiles(a32, monkeypatch):
+    """Regression: under an interpret=True scope every Pallas kernel
+    call — matmul, gated, flash, elementwise — must receive
+    interpret=True (no per-op suffix-sniffing left to disagree)."""
+    seen = {}
+    from repro.kernels import elementwise as ew
+    from repro.kernels import flash_attention as fa
+    from repro.kernels import matmul as mm
+
+    def spy(name, fn):
+        def wrapped(*args, **kw):
+            seen.setdefault(name, []).append(kw.get("interpret"))
+            return fn(*args, **kw)
+        return wrapped
+
+    monkeypatch.setattr(mm, "matmul_tiled", spy("tiled", mm.matmul_tiled))
+    monkeypatch.setattr(mm, "gated_matmul_tiled",
+                        spy("gated", mm.gated_matmul_tiled))
+    monkeypatch.setattr(fa, "flash_attention",
+                        spy("flash", fa.flash_attention))
+    monkeypatch.setattr(ew, "binary_op", spy("binary", ew.binary_op))
+
+    q = jnp.zeros((1, 8, 2, 16), jnp.float32)
+    with Policy(backend="pallas", interpret=True).scope():
+        ops.matmul(a32, a32)
+        ops.gated_matmul(a32, a32, a32)
+        ops.flash_attention(q, q, q, causal=True, bq=8, bk=8)
+        ops.add(a32, a32)
+    assert set(seen) == {"tiled", "gated", "flash", "binary"}
+    for name, flags in seen.items():
+        assert flags == [True], (name, flags)
+
+
+def test_explicit_interpret_overrides_policy(a32, monkeypatch):
+    from repro.kernels import elementwise as ew
+    flags = []
+    real = ew.binary_op
+    monkeypatch.setattr(
+        ew, "binary_op",
+        lambda *a, **kw: (flags.append(kw["interpret"]), real(*a, **kw))[1])
+    # scope says COMPILE (interpret=False); the explicit kwarg must win —
+    # were the override dropped, this would attempt (and fail) a TPU
+    # compile on this CPU host with interpret=False.
+    with Policy(backend="pallas", interpret=False).scope():
+        ops.add(a32, a32, interpret=True)
+    assert flags == [True]
+
+
+# ----------------------------------------------------------------------
+# VJP paths inherit the ambient policy
+# ----------------------------------------------------------------------
+
+def test_vjp_inherits_ambient_policy(a32, monkeypatch):
+    from repro.kernels import matmul as mm
+    calls = []
+    real = mm.matmul_tiled
+    monkeypatch.setattr(
+        mm, "matmul_tiled",
+        lambda *a, **kw: (calls.append(kw["interpret"]), real(*a, **kw))[1])
+    with Policy(backend="pallas", interpret=True).scope():
+        jax.grad(lambda x: jnp.sum(gemm.matmul(x, a32) ** 2))(a32)
+    # forward + da + db all ran the tiled kernel, all interpreted
+    assert len(calls) >= 3 and all(calls)
+
+
+# ----------------------------------------------------------------------
+# deprecation shims
+# ----------------------------------------------------------------------
+
+def test_deprecation_shims_warn_exactly_once(a32):
+    pol_mod.reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        gemm.set_default_backend("xla")
+        gemm.set_default_backend("xla")
+        with gemm.use_backend("pallas_interpret"):
+            pass
+        with gemm.use_backend("xla"):
+            pass
+        gemm.matmul(a32, a32, backend="xla")
+        gemm.matmul(a32, a32, backend="xla")
+        ops.resolve_tuned("tuned")
+        ops.resolve_tuned("tuned_interpret")
+    msgs = [str(w.message) for w in rec
+            if issubclass(w.category, DeprecationWarning)]
+    assert len(msgs) == 4, msgs     # one per distinct shim, not per call
+
+
+def test_legacy_backend_strings_match_policies(a32):
+    ref = gemm.matmul(a32, a32)
+    for name in pol_mod.LEGACY_BACKEND_NAMES:
+        p = Policy.from_backend(name)
+        if p.backend != "xla" and not p.resolved_interpret:
+            continue        # compiled-TPU path can't run on this host
+        np.testing.assert_allclose(
+            np.asarray(gemm.matmul(a32, a32, policy=p)), np.asarray(ref),
+            rtol=2e-4)
+    with pytest.raises(ValueError, match="tuned_interpret"):
+        Policy.from_backend("cuda")
+
+
+def test_shims_set_equivalent_policy():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        gemm.set_default_backend("tuned_interpret")
+    p = current_policy()
+    assert (p.backend, p.interpret, p.autotune) == ("pallas", True, "cached")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with gemm.use_backend("naive_interpret"):
+            q = current_policy()
+            assert (q.backend, q.interpret) == ("naive", True)
+    assert current_policy() is p
+
+
+# ----------------------------------------------------------------------
+# registry validation
+# ----------------------------------------------------------------------
+
+def test_unknown_backend_lists_registered_options(a32):
+    with pytest.raises(ValueError) as e:
+        ops.matmul(a32, a32, policy=Policy(backend="cuda"))
+    assert "naive" in str(e.value) and "pallas" in str(e.value) \
+        and "xla" in str(e.value)
+
+
+def test_unknown_epilogue_lists_registered_options(a32):
+    with pytest.raises(ValueError) as e:
+        ops.matmul(a32, a32, epilogue="bias_tanh")
+    assert "bias_silu" in str(e.value)
+
+
+def test_unknown_op_and_registry_introspection():
+    with pytest.raises(ValueError, match="registered ops"):
+        registry.get_impl("conv", "xla")
+    assert "matmul" in registry.registered_ops()
+    assert registry.registered_backends("matmul") == \
+        ("naive", "pallas", "xla")
+
+
+def test_unknown_autotune_mode_rejected():
+    with pytest.raises(ValueError, match="autotune"):
+        Policy(autotune="always")
+
+
+def test_unknown_policy_field_rejected():
+    with pytest.raises(ValueError, match="unknown policy field"):
+        Policy.parse("backend=pallas,turbo=on")
