@@ -37,7 +37,13 @@ _EXPORTS = {
     # GEMM chokepoint (core.gemm)
     "matmul": ("repro.core.gemm", "matmul"),
     "dense": ("repro.core.gemm", "dense"),
+    "dense_q": ("repro.core.gemm", "dense_q"),
     "gated_mlp": ("repro.core.gemm", "gated_mlp"),
+    # weight quantization (core.precision / models)
+    "QuantSpec": ("repro.core.precision", "QuantSpec"),
+    "quantize_int8": ("repro.core.precision", "quantize_int8"),
+    "dequantize": ("repro.core.precision", "dequantize"),
+    "quantize_params": ("repro.models.model", "quantize_params"),
     # kernel-level ops (kernels.ops)
     "flash_attention": ("repro.kernels.ops", "flash_attention"),
     "add": ("repro.kernels.ops", "add"),

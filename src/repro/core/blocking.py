@@ -172,6 +172,28 @@ def gated_traffic_bytes(
     return a_bytes + b_bytes + c_bytes
 
 
+def quant_traffic_bytes(
+    m: int, n: int, k: int, cfg: BlockConfig, itemsize: int,
+    w_itemsize: int = 1, scale_itemsize: int = 4,
+) -> int:
+    """Bytes moved HBM->VMEM by the int8-weight tiled kernel
+    (kernels.matmul.matmul_q_tiled).
+
+    Same reuse structure as hbm_traffic_bytes, but the B operand is
+    stored at `w_itemsize` (1 for int8) and a (1, N) per-channel scale
+    row rides along once per M-block row — the whole point of the
+    quantized path is that the weight stream shrinks itemsize/w_itemsize
+    x while A, C and the arithmetic stay full precision.
+    """
+    n_m = math.ceil(m / cfg.bm)
+    n_n = math.ceil(n / cfg.bn)
+    a_bytes = m * k * itemsize * n_n
+    b_bytes = k * n * w_itemsize * n_m
+    s_bytes = n * scale_itemsize * n_m
+    c_bytes = m * n * itemsize
+    return a_bytes + b_bytes + s_bytes + c_bytes
+
+
 def naive_traffic_bytes(m: int, n: int, k: int, itemsize: int) -> int:
     """Traffic model for the hierarchy-blind kernel (paper Listing 3).
 

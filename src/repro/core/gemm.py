@@ -13,6 +13,11 @@ Responsibilities on top of kernels.ops:
   * batched / n-d shapes (leading dims folded into M);
   * complex64 decomposition into real GEMMs (core.precision, Table 2);
   * f64 routing (no MXU path — XLA or interpret only);
+  * int8-weight GEMMs: `dense_q()` is the quantized twin of `dense()`
+    (weights from core.precision.quantize_int8, the matmul_q kernel op,
+    full epilogue lattice); its custom VJP differentiates the
+    dequantized f32 composition — cotangents for x and scale, a
+    symbolic zero for the int8 weight;
   * fused-epilogue eligibility: `dense(activation=..., residual=...)`
     and `gated_mlp()` run the fused Pallas flush only for real
     f32/bf16-class dtypes on the pallas backend (and only while
@@ -38,6 +43,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import policy as _pol
 from repro.core import precision as _prec
@@ -259,6 +265,118 @@ def _gated_bwd(policy, out_dtype, res, g):
 
 
 _gated_vjp.defvjp(_gated_fwd, _gated_bwd)
+
+
+# ----------------------------------------------------------------------
+# Quantized dense: int8 weights through the matmul_q op
+# ----------------------------------------------------------------------
+
+def _dense_q_2d(x, wq, scale, b, r, activation, policy, out_dtype):
+    """y = act((x @ wq) * scale + b) + r on 2D operands. Same fusion
+    rule as _dense_ep_2d — the quantized kernel carries the full
+    epilogue lattice, so (bias, activation) ride the fused flush and a
+    lone (m, n) residual does too; everything else composes unfused
+    through the same matmul_q op (xla/naive backends, f64 reroute)."""
+    pol = _route_dtype(x.dtype, policy)
+    if not _fusible(x.dtype, pol):
+        y = _ops.matmul_q(x, wq, scale, policy=pol, out_dtype=out_dtype)
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        if activation is not None:
+            y = _ACTIVATIONS[activation](y)
+        if r is not None:
+            y = y + r.astype(y.dtype)
+        return y
+    if b is not None or activation is not None:
+        bias = b if b is not None else jnp.zeros((wq.shape[-1],), x.dtype)
+        y = _ops.matmul_q(x, wq, scale, policy=pol, out_dtype=out_dtype,
+                          epilogue=_ACT_EPILOGUE[activation], bias=bias)
+        if r is not None:
+            y = y + r.astype(y.dtype)
+        return y
+    if r is not None:
+        if r.shape == (x.shape[0], wq.shape[-1]):
+            return _ops.matmul_q(x, wq, scale, policy=pol,
+                                 out_dtype=out_dtype, epilogue="residual",
+                                 residual=r)
+        y = _ops.matmul_q(x, wq, scale, policy=pol, out_dtype=out_dtype)
+        return y + r.astype(y.dtype)
+    return _ops.matmul_q(x, wq, scale, policy=pol, out_dtype=out_dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _dense_q_vjp(x, wq, scale, b, r, activation, policy, out_dtype):
+    return _dense_q_2d(x, wq, scale, b, r, activation, policy, out_dtype)
+
+
+def _dense_q_fwd(x, wq, scale, b, r, activation, policy, out_dtype):
+    return _dense_q_2d(x, wq, scale, b, r, activation, policy, out_dtype), \
+        (x, wq, scale, b, r)
+
+
+def _dense_q_bwd(activation, policy, out_dtype, res, g):
+    """Differentiate the dequantized f32 composition: the recompute and
+    cotangent GEMMs recurse through _matmul_vjp with the same policy
+    (autotuned tiles serve them), d_scale arrives via the dequant chain
+    rule, and the int8 weight — an integer leaf — gets the symbolic
+    float0 zero jax expects for non-differentiable dtypes."""
+    x, wq, scale, b, r = res
+
+    def ref(ops_):
+        w = (wq.astype(jnp.float32)
+             * ops_["scale"].reshape(1, -1)).astype(x.dtype)
+        z = _matmul_vjp(ops_["x"], w, policy, out_dtype)
+        if "b" in ops_:
+            z = z + ops_["b"].astype(z.dtype)
+        if activation is not None:
+            z = _ACTIVATIONS[activation](z)
+        if "r" in ops_:
+            z = z + ops_["r"].astype(z.dtype)
+        return z
+
+    prim = {"x": x, "scale": scale}
+    if b is not None:
+        prim["b"] = b
+    if r is not None:
+        prim["r"] = r
+    out, vjp = jax.vjp(ref, prim)
+    d = vjp(g.astype(out.dtype))[0]
+    d_wq = np.zeros(wq.shape, dtype=jax.dtypes.float0)
+    return d["x"], d_wq, d["scale"], d.get("b"), d.get("r")
+
+
+_dense_q_vjp.defvjp(_dense_q_fwd, _dense_q_bwd)
+
+
+def dense_q(x: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray,
+            b: jnp.ndarray | None = None, *, activation: str | None = None,
+            residual: jnp.ndarray | None = None, out_dtype=None,
+            policy: Policy | None = None,
+            backend: str | None = None) -> jnp.ndarray:
+    """y = act((x @ wq) * scale + b) + residual — `dense` with
+    per-channel int8 weights (core.precision.quantize_int8: wq (K, N)
+    int8, scale (1, N) f32) for x: (..., K). The pallas backend streams
+    int8 weight tiles and dequantizes on the f32 accumulator in the
+    kernel flush; activations stay f32/bf16 (complex is meaningless
+    against an int8 grid and rejected; f64 activations reroute like
+    `dense`). Differentiable in x, scale, b, residual — the int8 weight
+    is a frozen buffer."""
+    pol = _pol.resolve(policy, backend)
+    out_dtype = out_dtype or pol.resolved_out_dtype(x.dtype)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        raise ValueError("dense_q needs real activations; complex inputs "
+                         "have no int8 weight decomposition")
+    if activation not in (None, *_ACTIVATIONS):
+        raise ValueError(f"unknown activation {activation!r}; expected "
+                         f"one of {(None, *_ACTIVATIONS)}")
+    if x.ndim == 2:
+        return _dense_q_vjp(x, wq, scale, b, residual, activation, pol,
+                            out_dtype)
+    xf, lead = _fold_leading(x)
+    rf = residual.reshape(-1, residual.shape[-1]) \
+        if residual is not None else None
+    out = _dense_q_vjp(xf, wq, scale, b, rf, activation, pol, out_dtype)
+    return out.reshape(*lead, wq.shape[-1])
 
 
 def _fold_leading(x):

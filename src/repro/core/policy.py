@@ -17,6 +17,11 @@ knob into a frozen, hashable dataclass:
                     winners from the autotuner cache (repro.tuning)
     fuse_epilogues  allow bias/act/residual to ride the kernel flush
     out_dtype       default output dtype name (None = input dtype)
+    quant           weight quantization: "off" | "int8" (per-channel
+                    symmetric int8 storage, f32 accumulation — routes
+                    dense layers through core.gemm.dense_q and the
+                    matmul_q kernel op; core.precision holds the
+                    quantize/dequantize machinery)
 
 Because it is frozen and hashable it works as a jit static argument and
 a custom_vjp nondiff argument: identical policies never retrace, and a
@@ -50,6 +55,11 @@ LEGACY_BACKEND_NAMES = (
 
 AUTOTUNE_MODES = ("off", "cached")
 
+#: Policy-level quantization modes: "off" plus core.precision's
+#: QUANT_MODES (kept as a literal here so this module stays jax-free;
+#: tests/test_quant.py pins the two tuples against each other).
+QUANT_MODES = ("off", "int8")
+
 ENV_VAR = "REPRO_POLICY"
 
 
@@ -61,12 +71,17 @@ class Policy:
     autotune: str = "off"
     fuse_epilogues: bool = True
     out_dtype: Optional[str] = None
+    quant: str = "off"
 
     def __post_init__(self):
         if self.autotune not in AUTOTUNE_MODES:
             raise ValueError(
                 f"unknown autotune mode {self.autotune!r}; "
                 f"expected one of {AUTOTUNE_MODES}")
+        if self.quant not in QUANT_MODES:
+            raise ValueError(
+                f"unknown quant mode {self.quant!r}; "
+                f"expected one of {QUANT_MODES}")
         if self.interpret is not None and not isinstance(self.interpret, bool):
             raise ValueError(f"interpret must be None or bool, "
                              f"got {self.interpret!r}")
@@ -91,11 +106,16 @@ class Policy:
         "xla", "pallas", "pallas_interpret", "naive_interpret". Keys
         the autotuner cache (interpreter timings must never leak into
         compiled-TPU decisions) and matches the historical cache-key
-        backend component, so existing tuning.json files stay valid."""
+        backend component, so existing tuning.json files stay valid:
+        quant="off" (the historical state) adds nothing, while
+        quant="int8" appends "_int8" — quantized-kernel winners get
+        their own key population without invalidating old entries."""
         if self.backend == "xla":
-            return "xla"
-        return (f"{self.backend}_interpret" if self.resolved_interpret
-                else self.backend)
+            base = "xla"
+        else:
+            base = (f"{self.backend}_interpret" if self.resolved_interpret
+                    else self.backend)
+        return base if self.quant == "off" else f"{base}_{self.quant}"
 
     def fingerprint(self) -> str:
         """Full stable description — recorded in bench JSON
@@ -111,6 +131,8 @@ class Policy:
             parts.append("fuse_epilogues=false")
         if self.out_dtype is not None:
             parts.append(f"out_dtype={self.out_dtype}")
+        if self.quant != "off":
+            parts.append(f"quant={self.quant}")
         return ",".join(parts)
 
     def resolved_out_dtype(self, fallback):
@@ -176,6 +198,8 @@ class Policy:
                 kw[key] = val
             elif key == "out_dtype":
                 kw[key] = val
+            elif key == "quant":
+                kw[key] = val
             elif key == "chip":
                 try:
                     kw[key] = hw.CHIPS[val]
@@ -187,7 +211,7 @@ class Policy:
                 raise ValueError(
                     f"unknown policy field {key!r} in {spec!r}; expected "
                     "backend/interpret/chip/autotune/fuse_epilogues/"
-                    "out_dtype")
+                    "out_dtype/quant")
         return cls(**kw)
 
 

@@ -14,6 +14,15 @@ TPU MXUs have no native f64 or complex path, so:
 
     which trades one GEMM for three adds — a beyond-paper optimisation
     (25% fewer MXU flops) validated against jnp complex matmul.
+
+The ladder also extends *downward*: per-channel symmetric int8 weight
+quantization (`QuantSpec` + `quantize`/`dequantize`) stores W as one
+byte per element plus one f32 scale per output channel, cutting the
+weight-side HBM traffic 2-4x (the same bandwidth argument as the fused
+SwiGLU kernel). Accumulation stays f32 — reduced-precision *storage*
+with higher-precision *arithmetic*, the canonical accelerator trade.
+The quantized GEMM itself lives in kernels.matmul.matmul_q_tiled and is
+dispatched through core.gemm.dense_q.
 """
 
 from __future__ import annotations
@@ -38,6 +47,75 @@ POLICIES = {
     "f32": PrecisionPolicy("f32", jnp.float32, jnp.float32, jnp.float32),
     "bf16_f32out": PrecisionPolicy("bf16_f32out", jnp.bfloat16, jnp.float32, jnp.float32),
 }
+
+
+# ----------------------------------------------------------------------
+# int8 weight quantization (the precision ladder's downward rung)
+# ----------------------------------------------------------------------
+
+#: Quantization modes a QuantSpec can describe. Policy.quant adds "off"
+#: on top (no spec at all); the two tuples are pinned against each other
+#: in tests/test_quant.py.
+QUANT_MODES = ("int8",)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How a weight tensor is quantized.
+
+    mode: storage format ("int8" — symmetric, zero-point-free).
+    axis: the CONTRACTION axis reduced when computing the per-channel
+        amax. For a (K, N) dense weight the default -2 reduces over K,
+        yielding one scale per output channel N; for a scanned stack's
+        (L, K, N) weight the same axis yields per-(layer, channel)
+        scales (L, 1, N) that scan slices alongside the int8 leaf.
+    """
+    mode: str = "int8"
+    axis: int = -2
+
+    def __post_init__(self):
+        if self.mode not in QUANT_MODES:
+            raise ValueError(
+                f"unknown quantization mode {self.mode!r}; expected one "
+                f"of {QUANT_MODES} (Policy.quant additionally accepts "
+                "'off')")
+
+
+def quantize_int8(w: jnp.ndarray, axis: int = -2):
+    """Per-channel symmetric int8: ``(q, scale)`` with
+    ``q = round(w / scale)`` clipped to [-127, 127] and
+    ``scale = amax / 127`` reduced over the contraction `axis`
+    (keepdims, so ``q * scale`` broadcasts back to w's shape).
+
+    The symmetric grid never needs a zero point, and amax/127 means the
+    extreme value is representable exactly — round-to-nearest bounds the
+    element error by scale/2 (tests/test_quant.py pins this).
+    """
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax, 127.0) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize(w: jnp.ndarray, spec: QuantSpec):
+    """Quantize `w` per `spec` -> (q, scale)."""
+    if spec.mode == "int8":
+        return quantize_int8(w, axis=spec.axis)
+    raise ValueError(f"unknown quantization mode {spec.mode!r}; "
+                     f"expected one of {QUANT_MODES}")
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the float weight: ``q * scale`` in scale's dtype."""
+    return q.astype(scale.dtype) * scale
+
+
+def quant_error_bound(scale: jnp.ndarray) -> jnp.ndarray:
+    """Tight per-element reconstruction bound: |deq - w| <= scale / 2
+    (round-to-nearest on the symmetric grid; no clipping error because
+    scale = amax/127 puts the extremes exactly on the grid)."""
+    return scale * 0.5
 
 
 def complex_matmul(

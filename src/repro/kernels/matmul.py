@@ -35,6 +35,16 @@ A tile is staged against TWO weight operands (W_gate, W_up), two f32
 accumulators run in parallel, and the flush emits
 ``silu(A @ Wg) * (A @ Wu)`` in a single pass — both (M, N)
 intermediates of the unfused composition are eliminated.
+
+`matmul_q_tiled` extends the same staying-in-fast-memory argument to
+the *operand encoding*: the weight operand streams through HBM as int8
+(1 byte/element, a 2-4x reduction on the dominant weight-side traffic),
+is widened to the activation dtype in-register for the MXU dot (int8
+magnitudes <= 127 are exact in bf16), and the per-channel f32 scales —
+constant along k, so they commute with the contraction — are applied
+once on the f32 accumulator in the last-k flush, BEFORE the epilogue
+lattice, so every fused epilogue composes with quantized weights
+unchanged. Dequantized weights never materialise anywhere.
 """
 
 from __future__ import annotations
@@ -87,6 +97,34 @@ def _matmul_kernel(*refs, n_k: int, out_dtype, epilogue: str = "none"):
     @pl.when(k == n_k - 1)
     def _flush():
         acc = acc_ref[...]
+        if epilogue != "none":
+            acc = _apply_epilogue(acc, e_ref[...], epilogue)
+        o_ref[...] = acc.astype(out_dtype)
+
+
+def _matmul_q_kernel(*refs, n_k: int, out_dtype, epilogue: str = "none"):
+    """Int8-weight GEMM: accumulate A @ widen(Wq) per k step; the flush
+    dequantizes the f32 accumulator with the (1, bn) scale row and then
+    runs the ordinary epilogue lattice."""
+    if epilogue == "none":
+        a_ref, b_ref, s_ref, o_ref, acc_ref = refs
+        e_ref = None
+    else:
+        a_ref, b_ref, s_ref, e_ref, o_ref, acc_ref = refs
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...].astype(a_ref.dtype),
+        preferred_element_type=acc_ref.dtype,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        acc = acc_ref[...] * s_ref[...].astype(acc_ref.dtype)
         if epilogue != "none":
             acc = _apply_epilogue(acc, e_ref[...], epilogue)
         o_ref[...] = acc.astype(out_dtype)
@@ -191,6 +229,77 @@ def matmul_tiled(
         pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
     ]
     operands = [a, b]
+    if epilogue != "none":
+        e = epilogue_operand
+        assert e is not None, f"epilogue={epilogue} needs its operand"
+        if epilogue == "residual":
+            assert e.shape == (m, n), (e.shape, (m, n))
+            in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+        else:
+            assert e.shape == (1, n), (e.shape, (1, n))
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(e)
+
+    scratch, params = _tile_params(bm, bn, acc_dtype, interpret)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **params,
+    )(*operands)
+
+
+def matmul_q_tiled(
+    a: jnp.ndarray,
+    wq: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    block=None,
+    out_dtype=None,
+    interpret: bool = False,
+    epilogue: str = "none",
+    epilogue_operand: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """C[M,N] = epilogue((A[M,K] @ Wq[K,N]) * scale[1,N]).
+
+    Wq is int8 (per-channel symmetric, core.precision.quantize_int8),
+    scale the matching (1, N) f32 row. Same tiling contract as
+    matmul_tiled; the int8 W tile halves-to-quarters the B-side DMA and
+    the scale row rides its own (1, bn) BlockSpec into the flush. Note
+    the TPU int8 min-tile is (32, 128) — bk from core.blocking is
+    always a lane multiple, which satisfies it.
+    """
+    assert epilogue in EPILOGUES, epilogue
+    assert wq.dtype == jnp.int8, wq.dtype
+    if block is not None:
+        bm, bn, bk = block.bm, block.bn, block.bk
+    m, ka = a.shape
+    kb, n = wq.shape
+    assert ka == kb, (a.shape, wq.shape)
+    assert scale.shape == (1, n), (scale.shape, n)
+    if out_dtype is None:
+        out_dtype = a.dtype
+    bm, bn, bk = _clamp_block(bm, bn, bk, m, n, ka)
+    n_k = ka // bk
+    acc_dtype = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
+
+    grid = (m // bm, n // bn, n_k)
+    kernel = functools.partial(_matmul_q_kernel, n_k=n_k,
+                               out_dtype=out_dtype, epilogue=epilogue)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+    ]
+    operands = [a, wq, scale]
     if epilogue != "none":
         e = epilogue_operand
         assert e is not None, f"epilogue={epilogue} needs its operand"

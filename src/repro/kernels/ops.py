@@ -13,6 +13,9 @@ Execution selection is typed: every public op takes a
     op name     registered backends
     matmul      xla (jnp reference) | pallas (tiled, Listing 4) |
                 naive (hierarchy-blind, Listing 3)
+    matmul_q    xla (dequantized reference) | pallas (int8-weight
+                tiled kernel, flush-phase dequant) | naive (dequantize
+                then hierarchy-blind)
     gated_matmul  xla/naive (unfused compose) | pallas (dual-GEMM)
     flash_attention  xla (reference) | pallas (flash kernel)
     add / sub   xla | pallas/naive (elementwise kernel)
@@ -185,6 +188,112 @@ def matmul(
     out_dtype = out_dtype or pol.resolved_out_dtype(a.dtype)
     impl = _registry.get_impl("matmul", pol.backend)
     return impl(a, b, policy=pol, out_dtype=out_dtype, block=block,
+                epilogue=epilogue, bias=bias, residual=residual)
+
+
+# ----------------------------------------------------------------------
+# quantized matmul (int8 weights, per-channel scales)
+# ----------------------------------------------------------------------
+
+def _check_quant_operands(wq, scale, k, n):
+    """Validate the (Wq, scale) pair and normalise scale to (1, n) —
+    the kernel's BlockSpec layout."""
+    if wq.dtype != jnp.int8:
+        raise ValueError(f"matmul_q weights must be int8 "
+                         f"(core.precision.quantize_int8), got {wq.dtype}")
+    if wq.shape != (k, n):
+        raise ValueError(f"quantized weight shape {wq.shape} incompatible "
+                         f"with ({k}, {n})")
+    s = scale.reshape(1, -1) if scale.ndim == 1 else scale
+    if s.shape != (1, n):
+        raise ValueError(f"per-channel scale shape {scale.shape} "
+                         f"incompatible with n={n}; expected ({n},) or "
+                         f"(1, {n})")
+    if not jnp.issubdtype(s.dtype, jnp.floating):
+        raise ValueError(f"scale must be floating, got {s.dtype}")
+    return s
+
+
+@register_op("matmul_q", backend="xla")
+def _matmul_q_xla(a, wq, scale, *, policy, out_dtype, block, epilogue,
+                  bias, residual):
+    y = _ref.matmul_q_ref(a, wq, scale, out_dtype=out_dtype)
+    return _ref.epilogue_ref(y, epilogue, bias, residual)
+
+
+@register_op("matmul_q", backend="naive")
+def _matmul_q_naive(a, wq, scale, *, policy, out_dtype, block, epilogue,
+                    bias, residual):
+    """Dequantize in HBM, then the hierarchy-blind kernel — the
+    fallback composition (no traffic win, same function)."""
+    w = _ref.dequantize_ref(wq, scale).astype(a.dtype)
+    return _matmul_naive(a, w, policy=policy, out_dtype=out_dtype,
+                         block=block, epilogue=epilogue, bias=bias,
+                         residual=residual)
+
+
+@register_op("matmul_q", backend="pallas")
+def _matmul_q_pallas(a, wq, scale, *, policy, out_dtype, block, epilogue,
+                     bias, residual):
+    m, k = a.shape
+    n = wq.shape[1]
+    served = False
+    if block is None and policy.autotune == "cached":
+        block = _tcache.get_cache().get_matmul_q(
+            m, n, k, a.dtype, policy, epilogue=epilogue)
+        served = block is not None
+    itemsize = jnp.dtype(a.dtype).itemsize
+    if not _usable_block(block, served):
+        # tiles sized by the activation itemsize: conservative for the
+        # 1-byte W stream (a dedicated int8 chooser could go larger).
+        block = blocking.choose_block_config(m, n, k, itemsize, policy.chip)
+    mp = _round_up(m, block.bm)
+    np_ = _round_up(n, block.bn)
+    kp = _round_up(k, block.bk)
+    e = _epilogue_operand(epilogue, bias, residual, m, n, mp, np_)
+    out = _mm.matmul_q_tiled(
+        _pad2(a, mp, kp), _pad2(wq, kp, np_), _pad2(scale, 1, np_),
+        bm=block.bm, bn=block.bn, bk=block.bk,
+        out_dtype=out_dtype, interpret=policy.resolved_interpret,
+        epilogue=epilogue, epilogue_operand=e)
+    return out[:m, :n]
+
+
+def matmul_q(
+    a: jnp.ndarray,
+    wq: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    policy: Policy | None = None,
+    backend: str | None = None,        # deprecated string shim
+    out_dtype=None,
+    block: blocking.BlockConfig | None = None,
+    chip: hw.ChipSpec | None = None,
+    epilogue: str = "none",
+    bias: jnp.ndarray | None = None,
+    residual: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """2D GEMM against int8 per-channel-quantized weights:
+    ``epilogue((a @ wq) * scale)``.
+
+    The pallas backend streams the weight tiles as int8 and dequantizes
+    on the f32 accumulator in the flush (kernels.matmul.matmul_q_tiled);
+    xla/naive compute the same function from the dequantized composition
+    — every backend is conformance-tested against the ref oracle in
+    tests/test_property.py. Quantize weights once with
+    core.precision.quantize_int8; training-time cotangents live in
+    core.gemm.dense_q.
+    """
+    assert a.ndim == 2 and wq.ndim == 2, (a.shape, wq.shape)
+    assert a.shape[1] == wq.shape[0], (a.shape, wq.shape)
+    pol = _policy.resolve(policy, backend)
+    if chip is not None and chip is not pol.chip:
+        pol = pol.replace(chip=chip)
+    _check_epilogue(epilogue)
+    scale = _check_quant_operands(wq, scale, a.shape[1], wq.shape[1])
+    out_dtype = out_dtype or pol.resolved_out_dtype(a.dtype)
+    impl = _registry.get_impl("matmul_q", pol.backend)
+    return impl(a, wq, scale, policy=pol, out_dtype=out_dtype, block=block,
                 epilogue=epilogue, bias=bias, residual=residual)
 
 

@@ -19,6 +19,26 @@ def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
     return jnp.matmul(a, b, preferred_element_type=acc_dtype).astype(out_dtype)
 
 
+def dequantize_ref(wq: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the float weight from int8 + per-channel scale."""
+    return wq.astype(scale.dtype) * scale
+
+
+def matmul_q_ref(a: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray,
+                 out_dtype=None) -> jnp.ndarray:
+    """Dequantized GEMM oracle: ``(A @ Wq) * scale`` with the scale
+    applied on the accumulator — per-channel scales are constant along
+    k so they commute with the contraction, which is exactly where the
+    tiled kernel applies them (the flush phase). Wq is cast to A's
+    dtype in place of a dequantize pass: int8 magnitudes (<= 127) are
+    exact in bf16 and f32 alike."""
+    if out_dtype is None:
+        out_dtype = a.dtype
+    acc_dtype = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
+    acc = jnp.matmul(a, wq.astype(a.dtype), preferred_element_type=acc_dtype)
+    return (acc * scale.reshape(1, -1).astype(acc_dtype)).astype(out_dtype)
+
+
 def epilogue_ref(y: jnp.ndarray, epilogue: str,
                  bias: jnp.ndarray | None = None,
                  residual: jnp.ndarray | None = None) -> jnp.ndarray:

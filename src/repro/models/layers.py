@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gemm
+from repro.core import precision
 
 
 def dense_init(key, d_in: int, d_out: int, *, dtype, scale: float | None = None,
@@ -23,16 +24,43 @@ def dense_init(key, d_in: int, d_out: int, *, dtype, scale: float | None = None,
     return p
 
 
+def dense_quantize(p, spec: precision.QuantSpec | None = None):
+    """Quantize one dense param dict: {"w": float, "b"?} ->
+    {"w_q": int8, "w_scale": f32 per-channel, "b"?}. dense_apply /
+    gated_apply detect the quantized keys and route through
+    gemm.dense_q. Works on scanned stacks too: a (L, K, N) weight
+    yields (L, 1, N) scales that scan slices alongside the int8 leaf."""
+    spec = spec or precision.QuantSpec()
+    q, s = precision.quantize(p["w"], spec)
+    out = {"w_q": q, "w_scale": s}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
 def dense_apply(p, x, *, out_dtype=None, activation=None, residual=None):
     """activation/residual ride the kernel's fused flush phase on Pallas
     backends (core.gemm.dense epilogue routing)."""
+    if "w_q" in p:
+        return gemm.dense_q(x, p["w_q"], p["w_scale"], p.get("b"),
+                            activation=activation, residual=residual,
+                            out_dtype=out_dtype)
     return gemm.dense(x, p["w"].astype(x.dtype), p.get("b"),
                       activation=activation, residual=residual,
                       out_dtype=out_dtype)
 
 
 def gated_apply(p_gate, p_up, x, *, out_dtype=None):
-    """SwiGLU hidden phase through the dual-GEMM chokepoint."""
+    """SwiGLU hidden phase through the dual-GEMM chokepoint. Quantized
+    weights decompose into two dense_q GEMMs + the elementwise gate (the
+    dual-GEMM kernel has no int8 variant yet — the weight-traffic win is
+    identical, only the A-stream sharing is lost)."""
+    if "w_q" in p_gate:
+        g = gemm.dense_q(x, p_gate["w_q"], p_gate["w_scale"],
+                         out_dtype=out_dtype)
+        u = gemm.dense_q(x, p_up["w_q"], p_up["w_scale"],
+                         out_dtype=out_dtype)
+        return (jax.nn.silu(g) * u).astype(g.dtype)
     return gemm.gated_mlp(x, p_gate["w"].astype(x.dtype),
                           p_up["w"].astype(x.dtype), out_dtype=out_dtype)
 

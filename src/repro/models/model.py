@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import precision as _prec
 from repro.distributed.context import constrain
 from repro.models import attention as A
 from repro.models import layers as L
@@ -59,6 +60,39 @@ def init_params(cfg, key) -> Dict[str, Any]:
     else:
         raise ValueError(fam)
     return p
+
+
+#: Param subtrees never quantized: embeddings are gathered, not
+#: matmul'd (and tied lm_heads attend through them), and the MoE router
+#: is a negligible-byte f32 GEMM whose argmax decides expert routing —
+#: a quantization-grid flip there reroutes whole tokens.
+QUANT_EXCLUDE = ("embed", "router")
+
+
+def quantize_params(params, *, spec=None, exclude=QUANT_EXCLUDE):
+    """Walk a param tree and quantize every dense-layer weight dict
+    ({"w": 2D/3D float, "b"?} from layers.dense_init — scanned stacks
+    carry a leading layer dim) to int8 via layers.dense_quantize.
+    dense_apply/gated_apply then route those layers through
+    core.gemm.dense_q; the serving engine calls this once at
+    construction when its pinned policy has quant="int8". MoE expert
+    banks (raw 3D arrays, not dicts) and the `exclude` subtrees pass
+    through unchanged."""
+    spec = spec or _prec.QuantSpec()
+
+    def rec(node, name):
+        if isinstance(node, dict):
+            w = node.get("w")
+            if (w is not None and getattr(w, "ndim", 0) in (2, 3)
+                    and name not in exclude
+                    and jnp.issubdtype(w.dtype, jnp.floating)):
+                return L.dense_quantize(node, spec)
+            return {k: rec(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, name) for v in node)
+        return node
+
+    return rec(params, "")
 
 
 # ----------------------------------------------------------------------

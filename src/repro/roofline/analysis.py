@@ -148,6 +148,70 @@ def gated_mlp_savings(m: int, d_model: int, d_ff: int,
             "unfused": unfused, "fused": fused}
 
 
+def quant_gemm_traffic(m: int, n: int, k: int, itemsize: int,
+                       *, quant: bool,
+                       chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+                       cfg=None) -> int:
+    """HBM bytes for one dense-layer GEMM, full-width vs int8 weights.
+
+    Quantized, the weight stream is 1 byte/element plus a (1, N) f32
+    scale row per M-block row (core.blocking.quant_traffic_bytes);
+    activations, output and the f32 accumulation are untouched — the
+    reduction is pure weight-side bandwidth, which is why it is
+    assertable from the static model on a CPU-only container exactly
+    like the fused-epilogue wins.
+    """
+    if cfg is None:
+        cfg = blocking.choose_block_config(m, n, k, itemsize, chip=chip)
+    if quant:
+        return blocking.quant_traffic_bytes(m, n, k, cfg, itemsize)
+    return blocking.hbm_traffic_bytes(m, n, k, cfg, itemsize)
+
+
+def quant_gemm_savings(m: int, n: int, k: int, itemsize: int,
+                       chip: hw.ChipSpec = hw.DEFAULT_CHIP) -> dict:
+    """Fractional HBM-byte saving of the int8-weight GEMM — the number
+    benchmarks/bench_quant_matmul.py asserts. The same BlockConfig is
+    used for both sides (apples-to-apples reuse structure); weight-bound
+    shapes (decode: small m, big n*k) approach the full itemsize/1
+    reduction, activation-bound shapes see less."""
+    cfg = blocking.choose_block_config(m, n, k, itemsize, chip=chip)
+    full = quant_gemm_traffic(m, n, k, itemsize, quant=False, chip=chip,
+                              cfg=cfg)
+    quant = quant_gemm_traffic(m, n, k, itemsize, quant=True, chip=chip,
+                               cfg=cfg)
+    return {"full_bytes": full,
+            "quant_bytes": quant,
+            "saved_frac": 1.0 - quant / full,
+            "weight_bytes_full": k * n * itemsize,
+            "weight_bytes_quant": k * n * 1,
+            "cfg": cfg}
+
+
+def dense_q_layer_savings(m: int, d_model: int, d_ff: int, itemsize: int,
+                          chip: hw.ChipSpec = hw.DEFAULT_CHIP) -> dict:
+    """Whole-MLP view of the int8 win, against the model's REAL
+    before state: unquantized SwiGLU runs the fused dual-GEMM kernel
+    (one A stream feeds both weights — blocking.gated_traffic_bytes),
+    while the quantized path decomposes into two dense_q GEMMs
+    (models.layers.gated_apply has no int8 dual-GEMM variant, so the A
+    stream is paid twice) + the int8 down-projection. The weight-side
+    shrink usually still wins, but decomposition claws some back —
+    this is the honest before-to-after delta for Policy(quant="int8")."""
+    cfg_hidden = blocking.choose_block_config(m, d_ff, d_model, itemsize,
+                                              chip=chip, n_rhs=2)
+    full = (blocking.gated_traffic_bytes(m, d_ff, d_model, cfg_hidden,
+                                         itemsize)
+            + quant_gemm_traffic(m, d_model, d_ff, itemsize, quant=False,
+                                 chip=chip))
+    quant = (2 * quant_gemm_traffic(m, d_ff, d_model, itemsize, quant=True,
+                                    chip=chip)
+             + quant_gemm_traffic(m, d_model, d_ff, itemsize, quant=True,
+                                  chip=chip))
+    return {"full_bytes": full, "quant_bytes": quant,
+            "saved_frac": 1.0 - quant / full}
+
+
 @dataclasses.dataclass
 class RooflineReport:
     arch: str

@@ -74,6 +74,12 @@ class ServingEngine:
         # so a later ambient change can never retrace a live engine
         # under different kernels.
         self.policy = _pol.resolve(policy)
+        # quant="int8" policies quantize the dense weights ONCE here —
+        # every jitted step then streams int8 weight tiles (the 2-4x
+        # weight-traffic cut is the whole point of serving quantized);
+        # embeddings and routers stay full precision (model.QUANT_EXCLUDE).
+        if self.policy.quant == "int8":
+            params = M.quantize_params(params)
         self.params = params
         self.max_slots = max_slots
         # chunked_attention requires kv lengths beyond attn_chunk to be

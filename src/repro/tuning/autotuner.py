@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import hw
 from repro.core import policy as _pol
+from repro.core import precision as _prec
 from repro.core.blocking import BlockConfig, FlashBlockConfig
 from repro.core.policy import Policy
 from repro.kernels import ops as _ops
@@ -124,6 +125,7 @@ def tune_matmul(
     dtype="float32",
     *,
     epilogue: str = "none",
+    quant: str | None = None,
     policy: Policy | None = None,
     backend: str | None = None,         # deprecated string shim
     cache: TuningCache | None = None,
@@ -140,12 +142,25 @@ def tune_matmul(
     bias_silu / residual) with synthetic epilogue operands — the extra
     operand DMA and VPU work shift the optimum, so each variant gets
     its own cache entry (tuning.cache.matmul_key — keyed by the
-    policy's kernel fingerprint)."""
+    policy's kernel fingerprint).
+
+    `quant` (None = the policy's quant field) selects the op: "int8"
+    quantizes the weight operand and sweeps the matmul_q kernel — the
+    1-byte weight stream shifts the optimum again, so winners land
+    under the separate matmul_q key population (cache.matmul_q_key).
+    Pass quant="off" with an int8 policy to tune the PLAIN kernel under
+    that policy's fingerprint (the cotangent GEMMs of dense_q's
+    backward run unquantized)."""
     pol = _exec_policy(policy, backend)
     if chip is not None:        # explicit kwarg overrides the policy's chip
         pol = pol.replace(chip=chip)
     chip = pol.chip
-    cache = cache or get_cache()
+    quant = pol.quant if quant is None else quant
+    if quant not in _pol.QUANT_MODES:
+        raise ValueError(f"unknown quant mode {quant!r}; expected one of "
+                         f"{_pol.QUANT_MODES}")
+    quantized = quant == "int8"
+    cache = get_cache() if cache is None else cache
     interpret = pol.resolved_interpret
     rng = np.random.default_rng(seed)
     if np.dtype(dtype) == np.complex64:
@@ -157,8 +172,9 @@ def tune_matmul(
     # epilogue operands ride the args tuple, NOT a closure: _timer jits
     # with real arguments so the operand DMA being tuned for is timed,
     # not constant-folded (see _timer's methodology note).
+    args = (a, b) if not quantized else \
+        (a,) + _prec.quantize_int8(b)
     ep_name = None
-    args = (a, b)
     if epilogue == "residual":
         ep_name = "residual"
         args += (jnp.asarray(rng.normal(size=(m, n)), dtype),)
@@ -166,17 +182,30 @@ def tune_matmul(
         ep_name = "bias"
         args += (jnp.asarray(rng.normal(size=(n,)), dtype),)
 
+    if quantized:
+        time_one = lambda cfg: _timer(
+            lambda x, w, s, *e, c=cfg: _ops.matmul_q(
+                x, w, s, policy=pol, block=c, epilogue=epilogue,
+                **({ep_name: e[0]} if ep_name else {})),
+            args, interpret, warmup, iters)
+        put_winner = lambda cfg, meta: cache.put_matmul_q(
+            m, n, k, dtype, pol, cfg, epilogue=epilogue, **meta)
+    else:
+        time_one = lambda cfg: _timer(
+            lambda x, y, *e, c=cfg: _ops.matmul(
+                x, y, policy=pol, block=c, epilogue=epilogue,
+                **({ep_name: e[0]} if ep_name else {})),
+            args, interpret, warmup, iters)
+        put_winner = lambda cfg, meta: cache.put_matmul(
+            m, n, k, dtype, pol, cfg, epilogue=epilogue, **meta)
+
+    op = "matmul_q" if quantized else "matmul"
     return _sweep(
-        "matmul",
-        f"matmul {m}x{n}x{k} {np.dtype(dtype).name} epilogue={epilogue}",
+        op,
+        f"{op} {m}x{n}x{k} {np.dtype(dtype).name} epilogue={epilogue}",
         _space.matmul_candidates(m, n, k, itemsize, chip=chip,
                                  max_candidates=max_candidates),
-        lambda cfg: _timer(lambda x, y, *e, c=cfg: _ops.matmul(
-            x, y, policy=pol, block=c, epilogue=epilogue,
-            **({ep_name: e[0]} if ep_name else {})),
-            args, interpret, warmup, iters),
-        lambda cfg, meta: cache.put_matmul(m, n, k, dtype, pol, cfg,
-                                           epilogue=epilogue, **meta),
+        time_one, put_winner,
         cache, save, pol.kernel_fingerprint)
 
 
@@ -203,7 +232,7 @@ def tune_gated_matmul(
     if chip is not None:        # explicit kwarg overrides the policy's chip
         pol = pol.replace(chip=chip)
     chip = pol.chip
-    cache = cache or get_cache()
+    cache = get_cache() if cache is None else cache
     interpret = pol.resolved_interpret
     rng = np.random.default_rng(seed)
     a = jnp.asarray(rng.normal(size=(m, k)), dtype)
@@ -246,7 +275,7 @@ def tune_flash_attention(
     if chip is not None:        # explicit kwarg overrides the policy's chip
         pol = pol.replace(chip=chip)
     chip = pol.chip
-    cache = cache or get_cache()
+    cache = get_cache() if cache is None else cache
     interpret = pol.resolved_interpret
     rng = np.random.default_rng(seed)
     q = jnp.asarray(rng.normal(size=(1, tq, heads, d)), dtype)
@@ -266,38 +295,55 @@ def tune_flash_attention(
 
 
 def model_gemm_shapes(cfg, batch: int, seq: int,
-                      backward: bool = False) -> list[tuple]:
+                      backward: bool = False,
+                      quant: bool = False) -> list[tuple]:
     """The dense contractions a (batch, seq) step of `cfg` pushes
     through the core.gemm chokepoint, as deduplicated
     ``(op, m, n, k, epilogue)`` entries — op "matmul" (epilogue-variant
-    GEMM) or "gated" (the dual-GEMM SwiGLU kernel, epilogue "-").
-    Covers attention projections, the FFN (fused: gated hidden +
-    residual/bias down-projection, per cfg.mlp), and the logits GEMM at
-    the PADDED vocab — the lm_head the model actually allocates.
+    GEMM), "matmul_q" (int8-weight GEMM) or "gated" (the dual-GEMM
+    SwiGLU kernel, epilogue "-"). Covers attention projections, the FFN
+    (fused: gated hidden + residual/bias down-projection, per cfg.mlp),
+    and the logits GEMM at the PADDED vocab — the lm_head the model
+    actually allocates.
+
+    quant=True describes the model AFTER models.model.quantize_params:
+    dense layers run matmul_q, gated layers decompose into two dense_q
+    GEMMs of the hidden shape (models.layers.gated_apply), and —
+    crucially — a TIED lm_head keeps running the PLAIN kernel (the
+    embedding is in QUANT_EXCLUDE and embed_attend routes through
+    gemm.matmul), so its entry stays op "matmul".
 
     backward=True adds the custom-VJP cotangent GEMMs per forward
     shape: da = g @ w.T is (m, k, n) and dw = x.T @ g is (k, n, m),
     plus the plain recompute GEMMs the fused paths' backward passes
     route through the chokepoint — without these, a tuned training run
     would only serve the forward third of its GEMM flops from the cache.
+    dense_q's backward also differentiates through PLAIN matmuls (on
+    the dequantized weights), so these stay op "matmul" under quant.
     """
     m = batch * seq
     head_dim = getattr(cfg, "resolved_head_dim",
                        cfg.head_dim or cfg.d_model // cfg.n_heads)
     vocab = getattr(cfg, "padded_vocab", cfg.vocab)
     qkv_ep = "bias" if getattr(cfg, "qkv_bias", False) else "none"
+    dense_op = "matmul_q" if quant else "matmul"
+    logits_op = "matmul" if getattr(cfg, "tie_embeddings", False) \
+        else dense_op
     entries = {
-        ("matmul", m, cfg.n_heads * head_dim, cfg.d_model, qkv_ep),    # Q
-        ("matmul", m, cfg.n_kv_heads * head_dim, cfg.d_model, qkv_ep),  # K/V
-        ("matmul", m, cfg.d_model, cfg.n_heads * head_dim, "none"),    # O
-        ("matmul", m, vocab, cfg.d_model, "none"),                     # logits
+        (dense_op, m, cfg.n_heads * head_dim, cfg.d_model, qkv_ep),    # Q
+        (dense_op, m, cfg.n_kv_heads * head_dim, cfg.d_model, qkv_ep),  # K/V
+        (dense_op, m, cfg.d_model, cfg.n_heads * head_dim, "none"),    # O
+        (logits_op, m, vocab, cfg.d_model, "none"),                    # logits
     }
     if getattr(cfg, "mlp", "swiglu") == "swiglu":
-        entries.add(("gated", m, cfg.d_ff, cfg.d_model, "-"))
-        entries.add(("matmul", m, cfg.d_model, cfg.d_ff, "residual"))
+        if quant:   # gated_apply decomposes into two dense_q GEMMs
+            entries.add(("matmul_q", m, cfg.d_ff, cfg.d_model, "none"))
+        else:
+            entries.add(("gated", m, cfg.d_ff, cfg.d_model, "-"))
+        entries.add((dense_op, m, cfg.d_model, cfg.d_ff, "residual"))
     else:  # gelu MLP: bias+act fused up, bias fused down (+residual xla)
-        entries.add(("matmul", m, cfg.d_ff, cfg.d_model, "bias_gelu"))
-        entries.add(("matmul", m, cfg.d_model, cfg.d_ff, "bias"))
+        entries.add((dense_op, m, cfg.d_ff, cfg.d_model, "bias_gelu"))
+        entries.add((dense_op, m, cfg.d_model, cfg.d_ff, "bias"))
     if backward:
         # fused backward passes recompute/differentiate through plain
         # GEMMs: each forward (m, n, k) contributes its unfused triple
@@ -339,17 +385,21 @@ def warm_start(
     default: this host's execution policy).
     """
     pol = _exec_policy(policy, backend)
-    cache = cache or get_cache()
+    cache = get_cache() if cache is None else cache
     dtype = getattr(cfg, "dtype", "float32")
     seqs = (seq,) if isinstance(seq, int) else tuple(seq)
     shapes = sorted({s for q in seqs
                      for s in model_gemm_shapes(cfg, batch, q,
-                                                backward=backward)})
+                                                backward=backward,
+                                                quant=pol.quant == "int8")})
     hits, misses, tuned, failed = [], [], [], []
     for entry in shapes:
         op, m, n, k, ep = entry
         if op == "gated":
             hit = cache.get_gated(m, n, k, dtype, pol) is not None
+        elif op == "matmul_q":
+            hit = cache.get_matmul_q(m, n, k, dtype, pol,
+                                     epilogue=ep) is not None
         else:
             hit = cache.get_matmul(m, n, k, dtype, pol,
                                    epilogue=ep) is not None
@@ -364,6 +414,7 @@ def warm_start(
                                       save=False)
                 else:
                     tune_matmul(m, n, k, dtype, epilogue=ep,
+                                quant="int8" if op == "matmul_q" else "off",
                                 policy=pol, cache=cache, iters=iters,
                                 max_candidates=max_candidates, save=False)
                 tuned.append(entry)

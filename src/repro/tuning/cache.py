@@ -77,6 +77,24 @@ def matmul_key(m: int, n: int, k: int, dtype, backend,
     return key
 
 
+def matmul_q_key(m: int, n: int, k: int, dtype, backend,
+                 epilogue: str = "none") -> str:
+    """Int8-weight GEMM winners (kernels.ops.matmul_q). `dtype` is the
+    ACTIVATION dtype — the weight is int8 by definition of the op. A
+    Policy's quant field is normalised to "int8" before tagging so an
+    explicit ops.matmul_q call and a quant-policy-routed dense_q call
+    share one entry population; the int8-cost-model tiles must never be
+    served to the full-width kernel (and vice versa), which the op
+    prefix plus the fingerprint's _int8 suffix both enforce."""
+    if getattr(backend, "quant", None) == "off":
+        backend = backend.replace(quant="int8")
+    key = (f"matmul_q|{m}x{n}x{k}|{np.dtype(dtype).name}|"
+           f"{_backend_tag(backend)}")
+    if epilogue not in (None, "none"):
+        key += f"|{epilogue}"
+    return key
+
+
 def gated_key(m: int, n: int, k: int, dtype, backend) -> str:
     """The dual-GEMM SwiGLU kernel: (m, k) x 2*(k, n) -> (m, n)."""
     return f"gated|{m}x{n}x{k}|{np.dtype(dtype).name}|{_backend_tag(backend)}"
@@ -172,6 +190,21 @@ class TuningCache:
                    cfg: BlockConfig, *, epilogue: str = "none",
                    **meta: Any) -> str:
         key = matmul_key(m, n, k, dtype, backend, epilogue)
+        self.put(key, {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk,
+                       "tuned_at": _now(), **meta})
+        return key
+
+    def get_matmul_q(self, m: int, n: int, k: int, dtype, backend,
+                     epilogue: str = "none") -> Optional[BlockConfig]:
+        e = self.get(matmul_q_key(m, n, k, dtype, backend, epilogue))
+        if e is None:
+            return None
+        return BlockConfig(bm=int(e["bm"]), bn=int(e["bn"]), bk=int(e["bk"]))
+
+    def put_matmul_q(self, m: int, n: int, k: int, dtype, backend,
+                     cfg: BlockConfig, *, epilogue: str = "none",
+                     **meta: Any) -> str:
+        key = matmul_q_key(m, n, k, dtype, backend, epilogue)
         self.put(key, {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk,
                        "tuned_at": _now(), **meta})
         return key

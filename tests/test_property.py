@@ -13,10 +13,13 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 import repro.configs as C
-from repro.core import blocking, intensity
+from repro.core import blocking, intensity, precision
 from repro.core.hw import TPU_V5E
+from repro.core.policy import Policy
 from repro.distributed import compression
-from repro.kernels import ops
+from repro.kernels import ops, registry
+from repro.kernels import matmul as mm_kernels
+from repro.kernels import ref as kref
 from repro.kernels.ref import matmul_ref
 from repro.models import moe as MOE
 from repro.models.layers import apply_rope, default_positions
@@ -71,6 +74,93 @@ def test_matmul_padding_path(m, k, n, seed):
     out = ops.matmul(a, b, backend="pallas_interpret")
     np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, b)),
                                rtol=1e-4, atol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# Cross-backend differential harness: EVERY backend registered for an op
+# in kernels.registry is run against the pure-jnp oracle on
+# hypothesis-generated (shape, dtype, epilogue) tuples. A new backend
+# (a single @register_op call) is conformance-tested here for free —
+# including matmul_q, whose weights are drawn through the real
+# quantizer so the oracle and the kernels see the same int8 grid.
+# ----------------------------------------------------------------------
+
+#: max|err| allowed as a fraction of max|ref| — scaled by the dtype's
+#: accumulation/rounding granularity (bf16 epsilon is 2^-8).
+_DIFF_TOL = {"float32": 1e-4, "bfloat16": 6e-2}
+
+
+def _diff_operands(rng, m, n, k, dtype, epilogue):
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    bias = residual = None
+    if epilogue == "residual":
+        residual = jnp.asarray(rng.normal(size=(m, n)), dtype)
+    elif epilogue != "none":
+        bias = jnp.asarray(rng.normal(size=(n,)), dtype)
+    return a, b, bias, residual
+
+
+def _assert_backend_close(backend, out, ref_f32, dtype):
+    tol = _DIFF_TOL[dtype]
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref_f32)))
+    bound = tol * max(float(jnp.max(jnp.abs(ref_f32))), 1.0)
+    assert err <= bound, (backend, err, bound)
+
+
+@given(m=st.integers(1, 40), n=st.integers(1, 40), k=st.integers(1, 40),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       epilogue=st.sampled_from(mm_kernels.EPILOGUES),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=5, deadline=None)
+def test_matmul_backends_match_reference(m, n, k, dtype, epilogue, seed):
+    rng = np.random.default_rng(seed)
+    a, b, bias, residual = _diff_operands(rng, m, n, k, dtype, epilogue)
+    ref = kref.epilogue_ref(kref.matmul_ref(a, b, out_dtype=jnp.float32),
+                            epilogue, bias, residual)
+    for backend in registry.registered_backends("matmul"):
+        out = ops.matmul(a, b, policy=Policy(backend=backend, interpret=True),
+                         epilogue=epilogue, bias=bias, residual=residual)
+        assert out.dtype == jnp.dtype(dtype), backend
+        _assert_backend_close(backend, out, ref, dtype)
+
+
+@given(m=st.integers(1, 40), n=st.integers(1, 40), k=st.integers(1, 40),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       epilogue=st.sampled_from(mm_kernels.EPILOGUES),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=5, deadline=None)
+def test_matmul_q_backends_match_reference(m, n, k, dtype, epilogue, seed):
+    rng = np.random.default_rng(seed)
+    a, b, bias, residual = _diff_operands(rng, m, n, k, dtype, epilogue)
+    wq, scale = precision.quantize_int8(b)
+    ref = kref.epilogue_ref(
+        kref.matmul_q_ref(a, wq, scale, out_dtype=jnp.float32),
+        epilogue, bias, residual)
+    for backend in registry.registered_backends("matmul_q"):
+        out = ops.matmul_q(a, wq, scale,
+                           policy=Policy(backend=backend, interpret=True),
+                           epilogue=epilogue, bias=bias, residual=residual)
+        assert out.dtype == jnp.dtype(dtype), backend
+        _assert_backend_close(backend, out, ref, dtype)
+
+
+@given(m=st.integers(1, 40), n=st.integers(1, 40), k=st.integers(1, 40),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=5, deadline=None)
+def test_gated_matmul_backends_match_reference(m, n, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    wg = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    wu = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    ref = kref.gated_matmul_ref(a, wg, wu,
+                                out_dtype=jnp.float32).astype(jnp.float32)
+    for backend in registry.registered_backends("gated_matmul"):
+        out = ops.gated_matmul(
+            a, wg, wu, policy=Policy(backend=backend, interpret=True))
+        assert out.dtype == jnp.dtype(dtype), backend
+        _assert_backend_close(backend, out, ref, dtype)
 
 
 @given(seed=st.integers(0, 2**31), scale=st.floats(0.01, 10.0))
