@@ -33,9 +33,10 @@ from repro.core import policy as policy_mod
 from repro.core.policy import LEGACY_BACKEND_NAMES, Policy
 
 from benchmarks import (bench_add, bench_arch_step, bench_distributed_gemm,
-                        bench_fused_epilogue, bench_matmul,
-                        bench_quant_matmul, bench_roofline_table,
-                        bench_serving, bench_shared_memory, common)
+                        bench_flash_attention, bench_fused_epilogue,
+                        bench_matmul, bench_quant_matmul,
+                        bench_roofline_table, bench_serving,
+                        bench_shared_memory, common)
 
 SUITES = {
     "matmul": bench_matmul.run,               # Table 2 / Fig 7
@@ -47,6 +48,7 @@ SUITES = {
     "serving": bench_serving.run,              # continuous-batching engine
     "fused_epilogue": bench_fused_epilogue.run,  # fused-flush GEMM/SwiGLU
     "quant_matmul": bench_quant_matmul.run,    # int8-weight GEMM path
+    "flash_attention": bench_flash_attention.run,  # fused fwd/bwd + decode
 }
 
 # Suites whose run() accepts autotune= and sweeps the tuner.

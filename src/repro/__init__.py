@@ -46,6 +46,8 @@ _EXPORTS = {
     "quantize_params": ("repro.models.model", "quantize_params"),
     # kernel-level ops (kernels.ops)
     "flash_attention": ("repro.kernels.ops", "flash_attention"),
+    "flash_attention_bwd": ("repro.kernels.ops", "flash_attention_bwd"),
+    "flash_decode": ("repro.kernels.ops", "flash_decode"),
     "add": ("repro.kernels.ops", "add"),
     "sub": ("repro.kernels.ops", "sub"),
     # kernel registry (kernels.registry)
@@ -65,6 +67,8 @@ _EXPORTS = {
     "tune_matmul": ("repro.tuning", "tune_matmul"),
     "tune_gated_matmul": ("repro.tuning", "tune_gated_matmul"),
     "tune_flash_attention": ("repro.tuning", "tune_flash_attention"),
+    "tune_flash_bwd": ("repro.tuning", "tune_flash_bwd"),
+    "tune_flash_decode": ("repro.tuning", "tune_flash_decode"),
     "warm_start": ("repro.tuning", "warm_start"),
     "default_exec_policy": ("repro.tuning", "default_exec_policy"),
     # deprecation shims (string-backend era; warn once per process)

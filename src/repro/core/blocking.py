@@ -79,6 +79,19 @@ def choose_flash_config(
     return FlashBlockConfig(bq=min(256, tq), bk=min(512, tk))
 
 
+def choose_decode_config(
+    tk: int,
+    d: int,
+    itemsize: int = 2,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+) -> FlashBlockConfig:
+    """Default K/V tile for the q_len=1 decode kernel. The query tile is
+    a single row by construction, so the only knob is how much of the
+    cache streams per grid step; 512 keeps the DMA pipeline deep while
+    the prefix skip (pos < k_start) bounds wasted blocks to one."""
+    return FlashBlockConfig(bq=1, bk=min(512, tk))
+
+
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
@@ -201,6 +214,95 @@ def naive_traffic_bytes(m: int, n: int, k: int, itemsize: int) -> int:
     cross-thread reuse: A read n times, B read m times.
     """
     return (m * k * n + k * n * m + m * n) * itemsize
+
+
+def flash_traffic_bytes(
+    tq: int, tk: int, d: int, cfg: FlashBlockConfig, itemsize: int
+) -> int:
+    """Bytes moved HBM<->VMEM by the fused flash-attention forward, per
+    (batch x head) slice — multiply by B*H for a layer.
+
+    The q grid axis is outer and the kv axis inner, and the Q block index
+    is constant across consecutive kv steps, so Mosaic keeps each Q tile
+    resident: Q and O move once. K and V re-stream once per Q block row.
+    The S and P matrices never exist in HBM — that is the whole point,
+    and the term this model conspicuously lacks."""
+    n_q = math.ceil(tq / cfg.bq)
+    q_bytes = tq * d * itemsize
+    kv_bytes = 2 * tk * d * itemsize * n_q
+    o_bytes = tq * d * itemsize
+    return q_bytes + kv_bytes + o_bytes
+
+
+def flash_unfused_traffic_bytes(tq: int, tk: int, d: int,
+                                itemsize: int) -> int:
+    """The materialised-softmax baseline: one pass writes S = QK^T, a
+    second normalises it to P, a third contracts with V. Operands move
+    once (XLA fuses the row softmax into one read-modify-write), but the
+    (tq, tk) score matrix makes four f32 HBM trips: S written + read,
+    P written + read."""
+    qkv_bytes = (tq + 2 * tk) * d * itemsize
+    s_bytes = 4 * tq * tk * 4
+    o_bytes = tq * d * itemsize
+    return qkv_bytes + s_bytes + o_bytes
+
+
+def decode_traffic_bytes(pos: int, tk: int, d: int, cfg: FlashBlockConfig,
+                         itemsize: int) -> int:
+    """Fused decode-step traffic per (batch x head): the single query row
+    and output row bracket a K/V stream that covers only the valid cache
+    prefix — the kernel's `k_start <= pos` skip means blocks past the
+    write head are never DMA'd, so a depth-4096 cache at pos=127 moves
+    ceil(128/bk)*bk rows, not 4096."""
+    n_blocks = math.ceil((pos + 1) / cfg.bk)
+    kv_bytes = 2 * n_blocks * cfg.bk * d * itemsize
+    return kv_bytes + 2 * d * itemsize
+
+
+def decode_unfused_traffic_bytes(pos: int, tk: int, d: int,
+                                 itemsize: int) -> int:
+    """The masked-dense decode baseline (chunked/XLA over the whole
+    cache buffer): padding cannot be skipped because the mask is data,
+    so all tk cache rows stream, plus the (1, tk) score row's f32 round
+    trips. `pos` is accepted for signature symmetry — the baseline's
+    traffic does not depend on it, which is exactly the problem."""
+    del pos
+    kv_bytes = 2 * tk * d * itemsize
+    s_bytes = 4 * tk * 4
+    return kv_bytes + s_bytes + 2 * d * itemsize
+
+
+def flash_bwd_traffic_bytes(
+    tq: int, tk: int, d: int, cfg: FlashBlockConfig, itemsize: int
+) -> int:
+    """Recompute-style flash backward, per (batch x head): two sweeps,
+    neither of which ever reads or writes the (tq, tk) matrices.
+
+    Sweep 1 (dK/dV, kv-outer grid): K/V move once, the q-side streams
+    (q, do + the f32 lse/delta rows) re-read per kv block row, dK/dV
+    written once in f32. Sweep 2 (dQ, q-outer grid): mirror image.
+    delta = rowsum(do * o) is a pre-pass in XLA: o and do read once more.
+    """
+    n_q = math.ceil(tq / cfg.bq)
+    n_k = math.ceil(tk / cfg.bk)
+    rows = 2 * tq * 4                          # lse + delta, f32
+    q_stream = 2 * tq * d * itemsize + rows    # q + do + rows
+    sweep1 = 2 * tk * d * itemsize + n_k * q_stream + 2 * tk * d * 4
+    sweep2 = q_stream + n_q * 2 * tk * d * itemsize + tq * d * 4
+    delta_pass = 2 * tq * d * itemsize + tq * 4
+    return sweep1 + sweep2 + delta_pass
+
+
+def flash_bwd_stored_traffic_bytes(tq: int, tk: int, d: int,
+                                   itemsize: int) -> int:
+    """Stored-S attention backward: the classic formulation keeps the
+    (tq, tk) probability matrix from the forward and replays it. P is
+    read twice (dV and dS), dS is written then re-read for dQ/dK — four
+    f32 trips of the quadratic matrix, dwarfing the linear operands."""
+    operands = (3 * tq + 2 * tk) * d * itemsize   # q, do, o, k, v
+    s_bytes = 4 * tq * tk * 4
+    outs = (tq + 2 * tk) * d * 4                  # dq, dk, dv in f32
+    return operands + s_bytes + outs + 2 * tq * 4
 
 
 def gemm_time_model(

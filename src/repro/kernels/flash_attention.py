@@ -28,14 +28,22 @@ except ImportError:  # pragma: no cover
     _HAS_PLTPU = False
 
 _NEG_INF = -1e30
+# logsumexp sentinel for a fully-masked row (inactive decode slot): the
+# backward recomputes P = exp(S - lse), and S <= ~1e30, so +1e30 forces
+# P = 0 — the row contributes nothing to any gradient.
+_LSE_EMPTY = 1e30
 _LANES = 128
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, qo_ref, o_ref, acc_ref, m_ref, l_ref,
-    *, n_kv: int, bq: int, bk: int, scale: float,
-    causal: bool, window: int | None,
+    q_ref, k_ref, v_ref, qo_ref, o_ref, *rest,
+    n_kv: int, bq: int, bk: int, scale: float,
+    causal: bool, window: int | None, save_lse: bool,
 ):
+    if save_lse:
+        lse_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        acc_ref, m_ref, l_ref = rest
     kv_i = pl.program_id(2)
 
     @pl.when(kv_i == 0)
@@ -92,8 +100,14 @@ def _flash_kernel(
     @pl.when(kv_i == n_kv - 1)
     def _flush():
         l = l_ref[:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lsafe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / lsafe).astype(o_ref.dtype)
+        if save_lse:
+            # lse = m + log(l) in the scaled-logit units the backward
+            # recomputes S in; empty rows get the +inf sentinel.
+            lse = jnp.where(l > 0.0,
+                            m_ref[:, :1] + jnp.log(lsafe), _LSE_EMPTY)
+            lse_ref[0] = lse[:, 0]
 
 
 def flash_attention(
@@ -110,7 +124,10 @@ def flash_attention(
     bk: int = 512,
     block=None,
     interpret: bool = False,
-) -> jnp.ndarray:
+    return_lse: bool = False,
+):
+    """Returns o, or (o, lse) with the per-row logsumexp (bh, tq) f32
+    residual the recompute-style backward consumes (return_lse=True)."""
     # `block` (core.blocking.FlashBlockConfig — e.g. an autotuner-cache
     # winner) overrides the bq/bk defaults.
     if block is not None:
@@ -133,7 +150,7 @@ def flash_attention(
 
     kernel = functools.partial(
         _flash_kernel, n_kv=n_kv, bq=bq, bk=bk, scale=scale,
-        causal=causal, window=window)
+        causal=causal, window=window, save_lse=return_lse)
 
     if _HAS_PLTPU:
         scratch = [
@@ -150,8 +167,16 @@ def flash_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         )
 
+    o_spec = pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0))
+    o_shape = jax.ShapeDtypeStruct((bh, tq, d), q.dtype)
+    out_specs = o_spec
+    out_shape = o_shape
+    if return_lse:
+        out_specs = [o_spec, pl.BlockSpec((1, bq), lambda h, i, j: (h, i))]
+        out_shape = [o_shape, jax.ShapeDtypeStruct((bh, tq), jnp.float32)]
+
     qo_spec_kw = {"memory_space": pltpu.SMEM} if _HAS_PLTPU else {}
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=(bh, tq // bq, n_kv),
         in_specs=[
@@ -160,9 +185,361 @@ def flash_attention(
             pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
             pl.BlockSpec((1, 1), lambda h, i, j: (h, 0), **qo_spec_kw),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, tq, d), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
         **params,
     )(q, k, v, qo)
+    if return_lse:
+        return out[0], out[1]
+    return out
+
+
+# ----------------------------------------------------------------------
+# Recompute-style backward (no S matrix in HBM)
+# ----------------------------------------------------------------------
+#
+# With qs = q * scale and the saved per-row lse = m + log(l):
+#
+#     S  = qs K^T              P  = exp(S - lse)      (masked entries 0)
+#     dV = P^T dO              dP = dO V^T
+#     dS = P * (dP - D),       D  = rowsum(dO * O)    (computed in XLA)
+#     dK = dS^T qs             dQ = scale * (dS K)
+#
+# Two sweeps so every output block is revisited only along the LAST
+# ("arbitrary") grid dim: sweep 1 holds (bk, d) dK/dV accumulators in
+# VMEM while q/dO/lse/D blocks stream past; sweep 2 mirrors it for dQ.
+# S and P are recomputed in VMEM from the streamed tiles — they never
+# existed in HBM in the forward and never do here either.
+
+
+def _bwd_tiles(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               q_start, k_start, bq, bk, scale, causal, window):
+    """Shared recompute of the (bq, bk) P / dS tiles for both sweeps."""
+    q = q_ref[0].astype(jnp.float32) * scale              # (bq, d) scaled
+    k = k_ref[0].astype(jnp.float32)                      # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                      # (bk, d)
+    do = do_ref[0].astype(jnp.float32)                    # (bq, d)
+    lse = lse_ref[0][:, None]                             # (bq, 1)
+    delta = delta_ref[0][:, None]                         # (bq, 1)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bq, bk)
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)            # (bq, bk)
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bq, bk)
+    ds = p * (dp - delta)                                 # (bq, bk)
+    return q, k, do, p, ds
+
+
+def _flash_bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qo_ref,
+    dk_ref, dv_ref, dk_acc, dv_acc,
+    *, n_q: int, bq: int, bk: int, scale: float,
+    causal: bool, window: int | None,
+):
+    q_i = pl.program_id(2)
+
+    @pl.when(q_i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = q_i * bq + qo_ref[0, 0]
+    k_start = pl.program_id(1) * bk
+    run = True
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q, _, do, p, ds = _bwd_tiles(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+            q_start, k_start, bq, bk, scale, causal, window)
+        dv_acc[...] += jax.lax.dot_general(             # P^T dO  (bk, d)
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dk_acc[...] += jax.lax.dot_general(             # dS^T qs (bk, d)
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(q_i == n_q - 1)
+    def _flush():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _flash_bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qo_ref,
+    dq_ref, dq_acc,
+    *, n_kv: int, bq: int, bk: int, scale: float,
+    causal: bool, window: int | None,
+):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_start = pl.program_id(1) * bq + qo_ref[0, 0]
+    k_start = kv_i * bk
+    run = True
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        _, k, _, _, ds = _bwd_tiles(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+            q_start, k_start, bq, bk, scale, causal, window)
+        dq_acc[...] += jax.lax.dot_general(             # dS K  (bq, d)
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kv_i == n_kv - 1)
+    def _flush():
+        dq_ref[0] = (dq_acc[...] * scale).astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(
+    q: jnp.ndarray,           # [B*H,  Tq, D]
+    k: jnp.ndarray,           # [B*Hkv, Tk, D]
+    v: jnp.ndarray,           # [B*Hkv, Tk, D]
+    o: jnp.ndarray,           # [B*H,  Tq, D]  forward output
+    do: jnp.ndarray,          # [B*H,  Tq, D]  output cotangent
+    lse: jnp.ndarray,         # [B*H,  Tq] f32 forward logsumexp residual
+    *,
+    group: int = 1,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset=0,
+    bq: int = 256,
+    bk: int = 512,
+    block=None,
+    interpret: bool = False,
+):
+    """dQ/dK/dV in f32. dK/dV come back PER QUERY HEAD ([B*H, Tk, D]) —
+    Pallas forbids revisiting an output block across non-consecutive
+    grid steps, so the GQA group-sum over the h // group fan-in happens
+    in the caller (kernels.ops), not here."""
+    if block is not None:
+        bq, bk = block.bq, block.bk
+    bh, tq, d = q.shape
+    bhkv, tk, dk_ = k.shape
+    assert d == dk_ and v.shape == k.shape
+    assert bh == bhkv * group, (bh, bhkv, group)
+    assert o.shape == q.shape == do.shape
+    assert lse.shape == (bh, tq), (lse.shape, bh, tq)
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    assert tq % bq == 0 and tk % bk == 0, (tq, tk, bq, bk)
+    n_q, n_kv = tq // bq, tk // bk
+
+    qo = jnp.broadcast_to(
+        jnp.asarray(q_offset, jnp.int32).reshape(-1, 1), (bh, 1))
+    lse = lse.astype(jnp.float32)
+    # D = rowsum(dO * O): one cheap XLA reduction instead of a third
+    # sweep — (bh, tq) f32 streams into both kernels like lse does.
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    qd_spec = pl.BlockSpec((1, bq, d), lambda h, j, i: (h, i, 0))
+    row_spec = pl.BlockSpec((1, bq), lambda h, j, i: (h, i))
+    kv_spec = pl.BlockSpec((1, bk, d), lambda h, j, i, g=group: (h // g, j, 0))
+    qo_spec_kw = {"memory_space": pltpu.SMEM} if _HAS_PLTPU else {}
+    qo_spec = pl.BlockSpec((1, 1), lambda h, j, i: (h, 0), **qo_spec_kw)
+
+    params = {}
+    if _HAS_PLTPU and not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+
+    dkv = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dkv_kernel, n_q=n_q, bq=bq, bk=bk, scale=scale,
+            causal=causal, window=window),
+        grid=(bh, n_kv, n_q),
+        in_specs=[qd_spec, kv_spec, kv_spec, qd_spec, row_spec, row_spec,
+                  qo_spec],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda h, j, i: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j, i: (h, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, tk, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, tk, d), jnp.float32),
+        ],
+        scratch_shapes=([pltpu.VMEM((bk, d), jnp.float32)] * 2
+                        if _HAS_PLTPU else []),
+        interpret=interpret,
+        **params,
+    )(q, k, v, do, lse, delta, qo)
+    dk, dv = dkv
+
+    # Sweep 2 swaps the roles: grid (bh, n_q, n_kv), so the same specs
+    # serve with (j, i) now meaning (q-block, kv-block).
+    qd_spec2 = pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0))
+    row_spec2 = pl.BlockSpec((1, bq), lambda h, i, j: (h, i))
+    kv_spec2 = pl.BlockSpec((1, bk, d),
+                            lambda h, i, j, g=group: (h // g, j, 0))
+    qo_spec2 = pl.BlockSpec((1, 1), lambda h, i, j: (h, 0), **qo_spec_kw)
+    dq = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dq_kernel, n_kv=n_kv, bq=bq, bk=bk, scale=scale,
+            causal=causal, window=window),
+        grid=(bh, n_q, n_kv),
+        in_specs=[qd_spec2, kv_spec2, kv_spec2, qd_spec2, row_spec2,
+                  row_spec2, qo_spec2],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, d), jnp.float32),
+        scratch_shapes=([pltpu.VMEM((bq, d), jnp.float32)]
+                        if _HAS_PLTPU else []),
+        interpret=interpret,
+        **params,
+    )(q, k, v, do, lse, delta, qo)
+    return dq, dk, dv
+
+
+# ----------------------------------------------------------------------
+# Decode-specialized kernel (q_len = 1 against a long cache)
+# ----------------------------------------------------------------------
+
+def _flash_decode_kernel(
+    q_ref, k_ref, v_ref, pos_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, n_kv: int, bk: int, scale: float, window: int | None,
+):
+    kv_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0, 0]
+    k_start = kv_i * bk
+
+    # THE decode win: only blocks intersecting the valid prefix
+    # [max(0, pos-window+1), pos] run — a slot at depth 100 in a 4096
+    # cache touches one K/V block, not eight. pos < 0 (inactive slot)
+    # skips every block; the flush's l == 0 guard keeps o finite.
+    run = k_start <= pos
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > pos - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (1, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (1, bk)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = k_pos <= pos                  # kv_len = pos + 1 prefix
+        if window is not None:
+            mask &= k_pos > pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                               # (1, LANES)
+        s_max = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, s_max)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :1])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,           # [B*H, 1, D]  one new token per row
+    k: jnp.ndarray,           # [B*Hkv, Tk, D]  the cache, max_len deep
+    v: jnp.ndarray,           # [B*Hkv, Tk, D]
+    *,
+    group: int = 1,           # H // Hkv
+    window: int | None = None,
+    scale: float | None = None,
+    pos=0,                    # scalar, or (B*H,) per-row depth vector;
+                              # valid prefix is keys [0, pos] (causal)
+    bk: int = 512,
+    block=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q_len=1 flash attention. Equivalent to causal flash_attention
+    with q_offset=pos at tq=1, but grid (B*H, Tk/bk) with per-row
+    block-level skip: K/V stream only over the slot's valid prefix
+    instead of the whole max_len cache. GQA reads kv row h // group —
+    kv heads are never repeated. Rows with pos < 0 (inactive slots)
+    produce finite garbage the caller discards."""
+    if block is not None:
+        bk = block.bk
+    bh, tq, d = q.shape
+    assert tq == 1, f"flash_decode is q_len=1 only, got tq={tq}"
+    bhkv, tk, dk_ = k.shape
+    assert d == dk_ and v.shape == k.shape
+    assert bh == bhkv * group, (bh, bhkv, group)
+    scale = scale if scale is not None else d ** -0.5
+    bk = min(bk, tk)
+    assert tk % bk == 0, (tk, bk)
+    n_kv = tk // bk
+
+    pos_op = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1, 1), (bh, 1))
+
+    if _HAS_PLTPU:
+        scratch = [
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, _LANES), jnp.float32),
+            pltpu.VMEM((1, _LANES), jnp.float32),
+        ]
+    else:  # pragma: no cover
+        scratch = []
+
+    params = {}
+    if _HAS_PLTPU and not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        )
+
+    pos_spec_kw = {"memory_space": pltpu.SMEM} if _HAS_PLTPU else {}
+    return pl.pallas_call(
+        functools.partial(
+            _flash_decode_kernel, n_kv=n_kv, bk=bk, scale=scale,
+            window=window),
+        grid=(bh, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, 1), lambda h, j: (h, 0), **pos_spec_kw),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **params,
+    )(q, k, v, pos_op)

@@ -18,6 +18,10 @@ Execution selection is typed: every public op takes a
                 then hierarchy-blind)
     gated_matmul  xla/naive (unfused compose) | pallas (dual-GEMM)
     flash_attention  xla (reference) | pallas (flash kernel)
+    flash_attention_bwd  xla (closed-form ref) | pallas (recompute-
+                style two-sweep kernel, S/P never in HBM)
+    flash_decode  xla (ref composition) | pallas (q_len=1 kernel,
+                prefix-only K/V streaming)
     add / sub   xla | pallas/naive (elementwise kernel)
 
 `policy.interpret` (None = auto off-TPU) decides interpreter vs.
@@ -459,6 +463,158 @@ def flash_attention(
     impl = _registry.get_impl("flash_attention", pol.backend)
     return impl(q, k, v, policy=pol, causal=causal, window=window,
                 q_offset=q_offset, bq=bq, bk=bk, block=block)
+
+
+def _flat_heads(x):
+    """[B, T, H, D] -> the kernels' flat [B*H, T, D] layout."""
+    b, t, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+
+
+def _per_head(offset, h):
+    """Broadcast a (B,) per-batch offset vector to the flat layout's
+    per-(batch*head) rows; scalars pass through."""
+    if jnp.asarray(offset).ndim == 1:
+        return jnp.repeat(jnp.asarray(offset, jnp.int32), h)
+    return offset
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,            # [B, Tq, H, D]
+    k: jnp.ndarray,            # [B, Tk, Hkv, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset=0,
+    policy: Policy | None = None,
+    backend: str | None = None,
+    bq: int = 256,
+    bk: int = 512,
+    block: blocking.FlashBlockConfig | None = None,
+):
+    """Forward with residuals: (o, lse[B, H, Tq] f32) — what the
+    attention custom-VJP saves for flash_attention_bwd. Not a separate
+    registry op: it IS flash_attention plus the lse output, so it
+    follows the same backend split (pallas = kernel, else = ref)."""
+    pol = _policy.resolve(policy, backend)
+    if pol.backend != "pallas":
+        return _ref.attention_fwd_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset)
+    b_, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    if block is None and pol.autotune == "cached":
+        block = _tcache.get_cache().get_flash(tq, tk, d, q.dtype, pol)
+    if block is not None:
+        bq, bk = block.bq, block.bk
+    o, lse = _fa.flash_attention(
+        _flat_heads(q), _flat_heads(k), _flat_heads(v),
+        group=h // hkv, causal=causal, window=window,
+        q_offset=_per_head(q_offset, h), bq=bq, bk=bk,
+        interpret=pol.resolved_interpret, return_lse=True)
+    return (o.reshape(b_, h, tq, d).transpose(0, 2, 1, 3),
+            lse.reshape(b_, h, tq))
+
+
+@register_op("flash_attention_bwd", backend="xla")
+def _flash_bwd_xla(q, k, v, o, do, lse, *, policy, causal, window,
+                   q_offset, block):
+    return _ref.attention_bwd_ref(
+        q, k, v, o, do, lse, causal=causal, window=window,
+        q_offset=q_offset)
+
+
+@register_op("flash_attention_bwd", backend="pallas")
+def _flash_bwd_pallas(q, k, v, o, do, lse, *, policy, causal, window,
+                      q_offset, block):
+    b_, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    g = h // hkv
+    if block is None and policy.autotune == "cached":
+        block = _tcache.get_cache().get_flash_bwd(tq, tk, d, q.dtype, policy)
+    dq, dk, dv = _fa.flash_attention_bwd(
+        _flat_heads(q), _flat_heads(k), _flat_heads(v),
+        _flat_heads(o), _flat_heads(do), lse.reshape(b_ * h, tq),
+        group=g, causal=causal, window=window,
+        q_offset=_per_head(q_offset, h), block=block,
+        interpret=policy.resolved_interpret)
+    dq = dq.reshape(b_, h, tq, d).transpose(0, 2, 1, 3)
+    # the kernel returns per-QUERY-head dK/dV (it cannot revisit output
+    # blocks across the GQA fan-in); the group-sum happens here, in f32
+    dk = dk.reshape(b_, hkv, g, tk, d).sum(axis=2).transpose(0, 2, 1, 3)
+    dv = dv.reshape(b_, hkv, g, tk, d).sum(axis=2).transpose(0, 2, 1, 3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def flash_attention_bwd(
+    q: jnp.ndarray,            # [B, Tq, H, D]
+    k: jnp.ndarray,            # [B, Tk, Hkv, D]
+    v: jnp.ndarray,
+    o: jnp.ndarray,            # [B, Tq, H, D]  forward output
+    do: jnp.ndarray,           # [B, Tq, H, D]  output cotangent
+    lse: jnp.ndarray,          # [B, H, Tq] f32 forward residual
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset=0,
+    policy: Policy | None = None,
+    backend: str | None = None,
+    block: blocking.FlashBlockConfig | None = None,
+):
+    """Recompute-style attention backward: (dq, dk, dv) from the saved
+    (o, lse) residuals — S/P never hit HBM on the pallas backend."""
+    pol = _policy.resolve(policy, backend)
+    impl = _registry.get_impl("flash_attention_bwd", pol.backend)
+    return impl(q, k, v, o, do, lse, policy=pol, causal=causal,
+                window=window, q_offset=q_offset, block=block)
+
+
+@register_op("flash_decode", backend="xla")
+def _flash_decode_xla(q, k, v, *, policy, pos, window, bk, block):
+    # the fwd_ref composition (not attention_ref): its exp(S - lse) form
+    # zeroes fully-masked rows, so inactive slots (pos < 0) agree with
+    # the kernel's zero output instead of softmaxing over -1e30 logits.
+    o, _ = _ref.attention_fwd_ref(
+        q, k, v, causal=True, window=window, q_offset=pos)
+    return o
+
+
+@register_op("flash_decode", backend="pallas")
+def _flash_decode_pallas(q, k, v, *, policy, pos, window, bk, block):
+    b_, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    if block is None and policy.autotune == "cached":
+        block = _tcache.get_cache().get_flash_decode(tk, d, q.dtype, policy)
+    if block is not None:
+        bk = block.bk
+    o = _fa.flash_decode(
+        _flat_heads(q), _flat_heads(k), _flat_heads(v),
+        group=h // hkv, window=window, pos=_per_head(pos, h), bk=bk,
+        interpret=policy.resolved_interpret)
+    return o.reshape(b_, h, tq, d).transpose(0, 2, 1, 3)
+
+
+def flash_decode(
+    q: jnp.ndarray,            # [B, 1, H, D]  one new token per slot
+    k: jnp.ndarray,            # [B, Tk, Hkv, D]  the KV cache
+    v: jnp.ndarray,
+    *,
+    pos=0,                     # scalar, or (B,) per-slot depth vector
+    window: int | None = None,
+    policy: Policy | None = None,
+    backend: str | None = None,
+    bk: int = 512,
+    block: blocking.FlashBlockConfig | None = None,
+) -> jnp.ndarray:
+    """Decode-specialized attention: each slot's query attends its
+    cache prefix [0, pos] (kv_len = pos + 1). The pallas backend streams
+    only the K/V blocks covering the prefix; slots with pos < 0 are
+    inactive and return finite garbage the engine discards."""
+    assert q.shape[1] == 1, f"flash_decode is q_len=1 only: {q.shape}"
+    pol = _policy.resolve(policy, backend)
+    impl = _registry.get_impl("flash_decode", pol.backend)
+    return impl(q, k, v, policy=pol, pos=pos, window=window, bk=bk,
+                block=block)
 
 
 # ----------------------------------------------------------------------

@@ -119,3 +119,93 @@ def attention_ref(
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
     return out.astype(q.dtype)
+
+
+_LSE_EMPTY = 1e30    # fully-masked-row sentinel; see flash_attention.py
+
+
+def _attention_logits(q, k, *, causal, window, scale, q_offset):
+    """(scaled, masked) logits + mask shared by the fwd/bwd oracles."""
+    b, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    q_off = jnp.asarray(q_offset)
+    q_pos = jnp.arange(tq)[None, :, None] + \
+        (q_off[:, None, None] if q_off.ndim else q_off)
+    k_pos = jnp.arange(tk)[None, None, :]
+    mask = jnp.ones((1, tq, tk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return jnp.where(mask[:, None], logits, -1e30), mask, g, scale
+
+
+def attention_fwd_ref(
+    q: jnp.ndarray,              # [B, Tq, H, D]
+    k: jnp.ndarray,              # [B, Tk, Hkv, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset=0,
+):
+    """attention_ref plus the (B, H, Tq) f32 logsumexp residual — the
+    XLA twin of flash_attention(..., return_lse=True). Fully-masked
+    rows get the +1e30 sentinel so the backward's P = exp(S - lse)
+    vanishes for them."""
+    logits, mask, g, _ = _attention_logits(
+        q, k, causal=causal, window=window, scale=scale, q_offset=q_offset)
+    any_valid = jnp.any(jnp.broadcast_to(mask[:, None], logits.shape),
+                        axis=-1)
+    lse = jnp.where(any_valid,
+                    jax.scipy.special.logsumexp(logits, axis=-1),
+                    _LSE_EMPTY)                            # (B, H, Tq)
+    p = jnp.exp(logits - lse[..., None])
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype), lse
+
+
+def attention_bwd_ref(
+    q: jnp.ndarray,              # [B, Tq, H, D]
+    k: jnp.ndarray,              # [B, Tk, Hkv, D]
+    v: jnp.ndarray,
+    o: jnp.ndarray,              # [B, Tq, H, D]  forward output
+    do: jnp.ndarray,             # [B, Tq, H, D]  output cotangent
+    lse: jnp.ndarray,            # [B, H, Tq] f32 forward residual
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset=0,
+):
+    """Closed-form attention backward from the saved (o, lse) residuals
+    — the dense oracle for the recompute-style Pallas kernel, GQA
+    group-sum included. Returns (dq, dk, dv) in the input dtypes."""
+    b, tq, h, d = q.shape
+    _, tk, hkv, _ = k.shape
+    logits, _, g, scale = _attention_logits(
+        q, k, causal=causal, window=window, scale=scale, q_offset=q_offset)
+    p = jnp.exp(logits - lse.astype(jnp.float32)[..., None])  # (B,H,Tq,Tk)
+    dof = do.astype(jnp.float32)
+    of = o.astype(jnp.float32)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    qs = q.astype(jnp.float32) * scale
+
+    dv = jnp.einsum("bhqk,bqhd->bkhd", p, dof)             # per q-head
+    dp = jnp.einsum("bqhd,bkhd->bhqk", dof, vf)
+    delta = jnp.sum(dof * of, axis=-1)                     # (B, Tq, H)
+    ds = p * (dp - delta.transpose(0, 2, 1)[..., None])
+    dq = scale * jnp.einsum("bhqk,bkhd->bqhd", ds, kf)
+    dk = jnp.einsum("bhqk,bqhd->bkhd", ds, qs)             # per q-head
+    # GQA: each kv head accumulates its group of query heads
+    dk = dk.reshape(b, tk, hkv, g, d).sum(axis=3)
+    dv = dv.reshape(b, tk, hkv, g, d).sum(axis=3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)

@@ -116,8 +116,14 @@ def main(argv=None):
         rep = tuning.warm_start(cfg, 1, buckets, policy=wpol,
                                 autotune=args.autotune)
         print(tuning.describe_warm_start(rep))
+        # decode attends over the engine's cache depth, which rounds
+        # max_len up to an attn_chunk multiple (engine.__init__)
+        a = cfg.attn_chunk
+        cache_len = max_len + (a - max_len % a if max_len > a
+                               and max_len % a else 0)
         rep = tuning.warm_start(cfg, max_slots, 1, policy=wpol,
-                                autotune=args.autotune)
+                                autotune=args.autotune,
+                                decode_len=cache_len)
         print(tuning.describe_warm_start(rep))
 
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))

@@ -11,6 +11,7 @@ insight):
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional
 
@@ -122,33 +123,108 @@ def chunked_attention(
 
 
 def _resolve_attn_policy(policy, backend) -> Policy:
-    """Attention keeps an explicit opt-in contract: the flash kernel is
-    forward-only (no VJP) and requires the full kv to be valid, so the
-    default here is the XLA online-softmax path — NOT the ambient GEMM
-    policy. Callers that want the kernel pass a policy (or, deprecated,
-    a legacy backend string) explicitly."""
+    """Attention follows the ambient execution policy like every other
+    chokepoint: the flash kernel has a registered backward
+    (flash_attention_bwd) and a decode kernel (flash_decode), so the
+    historical fwd-only XLA-default carve-out is gone. Code that relied
+    on the old opt-in contract — an ambient pallas scope silently
+    getting the chunked XLA path here — gets a one-time deprecation
+    notice the first time the new resolution changes its routing."""
     if policy is None and backend is None:
-        return _XLA_POLICY
+        pol = _pol.current_policy()
+        if pol.backend != "xla":
+            _pol.warn_deprecated(
+                "attn_xla_default_carveout",
+                "attention now follows the ambient execution policy: the "
+                "flash kernel gained a fused backward and a decode kernel, "
+                "so the old backward-unsupported XLA-default carve-out is "
+                "removed — pass policy=Policy() explicitly to keep the "
+                "chunked XLA path under a non-xla scope")
+        return pol
     return _pol.resolve(policy, backend)
 
 
 _XLA_POLICY = Policy()
 
 
-def attend(q, k, v, *, causal, window, chunk, q_offset=0, kv_len=None,
-           policy: Policy | None = None, backend: str | None = None,
-           io_dtype=jnp.float32):
-    """Backend mux. The Pallas kernel streams q_offset (scalar or per-row
-    vector) as data but still requires the full kv to be valid.
+def _route_dtype(pol: Policy, dtype) -> Policy:
+    """The flash kernels accumulate in f32 by construction, so f64
+    requests reroute to the XLA chunked path, which honours the wider
+    dtype (mirrors core.gemm._route_dtype, but unconditional: interpret
+    mode would silently downcast too)."""
+    if jnp.dtype(dtype) == jnp.float64 and pol.backend != "xla":
+        return pol.replace(backend="xla")
+    return pol
+
+
+def _flash_shapes_ok(tq: int, tk: int) -> bool:
+    """The kernels require block sizes to divide the sequence lengths
+    after clamping (flash_attention asserts it); ragged shapes fall
+    back to the chunked path."""
+    return tq % min(256, tq) == 0 and tk % min(512, tk) == 0
+
+
+# The fused custom-VJP chokepoint. causal/window/policy ride as nondiff
+# arguments (hashable — the core.gemm pattern), so the backward op runs
+# under the same execution policy as the forward.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _attention_fused(q, k, v, causal, window, pol):
+    o, _ = kops.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, policy=pol)
+    return o
+
+
+def _attention_fused_fwd(q, k, v, causal, window, pol):
+    o, lse = kops.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, policy=pol)
+    return o, (q, k, v, o, lse)
+
+
+def _attention_fused_bwd(causal, window, pol, res, do):
+    q, k, v, o, lse = res
+    return kops.flash_attention_bwd(
+        q, k, v, o, do, lse, causal=causal, window=window, policy=pol)
+
+
+_attention_fused.defvjp(_attention_fused_fwd, _attention_fused_bwd)
+
+
+def attention(q, k, v, *, causal, window, chunk, q_offset=0, kv_len=None,
+              policy: Policy | None = None, backend: str | None = None,
+              io_dtype=jnp.float32, decode: bool = False):
+    """The attention chokepoint (né `attend`). Routing under the
+    resolved policy:
+
+      * pallas + decode step (t == 1, kv_len = pos + 1): the
+        flash_decode kernel — K/V stream only over each slot's valid
+        cache prefix.
+      * pallas + full-kv (kv_len None, block-divisible shapes, zero
+        q_offset): the fused custom-VJP path — flash forward saving the
+        per-row logsumexp, flash_attention_bwd for gradients (replacing
+        differentiate-through-chunked).
+      * everything else (xla policy, f64, ragged shapes, masked
+        prefill): the chunked online-softmax path, differentiable by
+        construction.
 
     The XLA path is wrapped in a named_scope so the roofline analyzer
     can identify attention-interior traffic — on the TPU target this
-    whole region is the Pallas flash kernel (kernels/flash_attention.py,
-    same math, validated in interpret mode) whose intermediates never
-    touch HBM. §Perf models that substitution from the tag.
+    whole region is the Pallas flash kernel (same math, validated in
+    interpret mode) whose intermediates never touch HBM. §Perf models
+    that substitution from the tag.
     """
-    pol = _resolve_attn_policy(policy, backend)
-    if pol.backend != "xla" and kv_len is None:
+    pol = _route_dtype(_resolve_attn_policy(policy, backend), q.dtype)
+    if pol.backend == "pallas":
+        if decode and q.shape[1] == 1 and k.shape[1] % min(512, k.shape[1]) == 0:
+            # kv_len = q_offset + 1 by the decode contract: the kernel's
+            # per-row prefix mask IS causal masking at depth q_offset.
+            return kops.flash_decode(
+                q, k, v, pos=q_offset, window=window, policy=pol)
+        if kv_len is None and _flash_shapes_ok(q.shape[1], k.shape[1]) \
+                and isinstance(q_offset, int) and q_offset == 0:
+            return _attention_fused(q, k, v, causal, window, pol)
+    elif pol.backend != "xla" and kv_len is None:
+        # naive etc.: the forward-only op (registry raises for backends
+        # with no flash impl, listing the registered ones)
         return kops.flash_attention(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
             policy=pol)
@@ -156,6 +232,11 @@ def attend(q, k, v, *, causal, window, chunk, q_offset=0, kv_len=None,
         return chunked_attention(
             q, k, v, causal=causal, window=window, chunk=chunk,
             q_offset=q_offset, kv_len=kv_len, io_dtype=io_dtype)
+
+
+#: Backwards-compatible alias — attn_apply and external callers used
+#: the old name; same function, same signature.
+attend = attention
 
 
 # ----------------------------------------------------------------------
@@ -216,9 +297,11 @@ def attn_apply(
 ):
     """Returns (out, new_cache). new_cache is None unless cache given.
 
-    Kernel selection for the no-cache paths comes from `policy` (or the
-    deprecated `backend` string); cached decode always runs the XLA
-    masked path (see _resolve_attn_policy)."""
+    Kernel selection comes from `policy` (or the deprecated `backend`
+    string, or the ambient policy): no-cache paths take the fused
+    flash fwd/bwd pair, single-token cached steps take flash_decode,
+    and masked prefill-into-cache stays on the chunked XLA path (see
+    attention())."""
     pol = _resolve_attn_policy(policy, backend)
     b, t, _ = x.shape
     dh = cfg.resolved_head_dim
@@ -268,7 +351,8 @@ def attn_apply(
         # Per-row masks subsume the SWA fast path (window via mask).
         out = attend(q, ck, cv, causal=True, window=cfg.window,
                      chunk=cfg.attn_chunk, q_offset=pos,
-                     kv_len=pos + 1, io_dtype=io_dtype)
+                     kv_len=pos + 1, io_dtype=io_dtype,
+                     policy=pol, decode=True)
     elif cache is not None:
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
                                                  k.astype(cache["k"].dtype),
@@ -287,11 +371,12 @@ def attn_apply(
                          chunk=cfg.attn_chunk,
                          kv_len=jnp.minimum(cache_pos + 1 - start,
                                             cfg.window),
-                         io_dtype=io_dtype)
+                         io_dtype=io_dtype, policy=pol)
         else:
             out = attend(q, ck, cv, causal=True, window=cfg.window,
                          chunk=cfg.attn_chunk, q_offset=cache_pos,
-                         kv_len=cache_pos + t, io_dtype=io_dtype)
+                         kv_len=cache_pos + t, io_dtype=io_dtype,
+                         policy=pol, decode=(t == 1))
     else:
         out = attend(q, k, v, causal=causal, window=cfg.window,
                      chunk=cfg.attn_chunk, policy=pol,

@@ -212,6 +212,55 @@ def dense_q_layer_savings(m: int, d_model: int, d_ff: int, itemsize: int,
             "saved_frac": 1.0 - quant / full}
 
 
+def attention_fwd_savings(tq: int, tk: int, d: int, itemsize: int,
+                          cfg: blocking.FlashBlockConfig | None = None,
+                          chip: hw.ChipSpec = hw.DEFAULT_CHIP) -> dict:
+    """Fractional HBM-byte saving of the fused flash forward over the
+    materialised-softmax baseline, per (batch x head) slice. The win is
+    the missing 4*tq*tk*4 S/P round trips, bought back by re-streaming
+    K/V once per Q block row — net positive whenever tq*tk dwarfs the
+    linear operand terms, i.e. every training shape."""
+    if cfg is None:
+        cfg = blocking.choose_flash_config(tq, tk, d, itemsize, chip=chip)
+    fused = blocking.flash_traffic_bytes(tq, tk, d, cfg, itemsize)
+    unfused = blocking.flash_unfused_traffic_bytes(tq, tk, d, itemsize)
+    return {"fused_bytes": fused, "unfused_bytes": unfused,
+            "saved_frac": 1.0 - fused / unfused, "cfg": cfg}
+
+
+def decode_attention_savings(pos: int, tk: int, d: int, itemsize: int,
+                             cfg: blocking.FlashBlockConfig | None = None,
+                             chip: hw.ChipSpec = hw.DEFAULT_CHIP) -> dict:
+    """Fractional HBM-byte saving of the decode kernel over the masked
+    dense scan, per (batch x head) — the number
+    benchmarks/bench_flash_attention.py asserts. Two independent terms:
+    the prefix skip (only ceil((pos+1)/bk)*bk of tk cache rows stream,
+    the dominant win early in a long-max-length cache) and the skipped
+    (1, tk) f32 score-row round trips."""
+    if cfg is None:
+        cfg = blocking.choose_decode_config(tk, d, itemsize, chip=chip)
+    fused = blocking.decode_traffic_bytes(pos, tk, d, cfg, itemsize)
+    unfused = blocking.decode_unfused_traffic_bytes(pos, tk, d, itemsize)
+    return {"fused_bytes": fused, "unfused_bytes": unfused,
+            "saved_frac": 1.0 - fused / unfused, "cfg": cfg}
+
+
+def attention_bwd_savings(tq: int, tk: int, d: int, itemsize: int,
+                          cfg: blocking.FlashBlockConfig | None = None,
+                          chip: hw.ChipSpec = hw.DEFAULT_CHIP) -> dict:
+    """Fractional HBM-byte saving of the recompute-style flash backward
+    over the stored-S formulation, per (batch x head). Recompute trades
+    the four quadratic f32 trips (P read twice, dS written + re-read)
+    for linear re-streams of the operands across both sweeps — the
+    classic flash-attention bandwidth argument, backward edition."""
+    if cfg is None:
+        cfg = blocking.choose_flash_config(tq, tk, d, itemsize, chip=chip)
+    fused = blocking.flash_bwd_traffic_bytes(tq, tk, d, cfg, itemsize)
+    unfused = blocking.flash_bwd_stored_traffic_bytes(tq, tk, d, itemsize)
+    return {"fused_bytes": fused, "unfused_bytes": unfused,
+            "saved_frac": 1.0 - fused / unfused, "cfg": cfg}
+
+
 @dataclasses.dataclass
 class RooflineReport:
     arch: str

@@ -294,6 +294,135 @@ def tune_flash_attention(
         cache, save, pol.kernel_fingerprint)
 
 
+def tune_flash_decode(
+    tk: int,
+    d: int,
+    dtype="float32",
+    *,
+    batch: int = 4,
+    heads: int = 1,
+    pos: int | None = None,
+    window: int | None = None,
+    policy: Policy | None = None,
+    backend: str | None = None,         # deprecated string shim
+    cache: TuningCache | None = None,
+    chip: hw.ChipSpec | None = None,
+    warmup: int = 1,
+    iters: int = 3,
+    max_candidates: int | None = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """Sweep K/V tile sizes for the q_len=1 decode kernel over a
+    depth-tk cache and persist the winner under flash_decode_key.
+
+    `pos` defaults to tk - 1 (a full cache): that is the worst case for
+    DMA volume and the regime the steady-state serving loop lives in, so
+    it is what the timer should optimise. The `batch` slots share one
+    pos — per-slot raggedness moves block-skip work, not the optimum.
+    """
+    pol = _exec_policy(policy, backend)
+    if chip is not None:        # explicit kwarg overrides the policy's chip
+        pol = pol.replace(chip=chip)
+    chip = pol.chip
+    cache = get_cache() if cache is None else cache
+    interpret = pol.resolved_interpret
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(batch, 1, heads, d)), dtype)
+    kv = jnp.asarray(rng.normal(size=(batch, tk, heads, d)), dtype)
+    pos_v = jnp.full((batch,), tk - 1 if pos is None else pos, jnp.int32)
+    itemsize = jnp.dtype(dtype).itemsize
+
+    return _sweep(
+        "flash_decode", f"flash_decode {tk}xd{d} {np.dtype(dtype).name}",
+        _space.flash_decode_candidates(tk, d, itemsize, chip=chip,
+                                       max_candidates=max_candidates),
+        lambda cfg: _timer(lambda x, y, p, c=cfg: _ops.flash_decode(
+            x, y, y, pos=p, window=window, policy=pol, block=c),
+            (q, kv, pos_v), interpret, warmup, iters),
+        lambda cfg, meta: cache.put_flash_decode(tk, d, dtype, pol, cfg,
+                                                 **meta),
+        cache, save, pol.kernel_fingerprint)
+
+
+def tune_flash_bwd(
+    tq: int,
+    tk: int,
+    d: int,
+    dtype="float32",
+    *,
+    heads: int = 1,
+    causal: bool = True,
+    policy: Policy | None = None,
+    backend: str | None = None,         # deprecated string shim
+    cache: TuningCache | None = None,
+    chip: hw.ChipSpec | None = None,
+    warmup: int = 1,
+    iters: int = 3,
+    max_candidates: int | None = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """Sweep (bq, bk) for the two-sweep recompute backward and persist
+    the winner under flash_bwd_key — a separate population from the
+    forward's (the dK/dV accumulators + q/do re-streams shift the
+    optimum). Residuals (o, lse) come from one un-timed forward call so
+    the sweep times exactly what training's backward pass runs."""
+    pol = _exec_policy(policy, backend)
+    if chip is not None:        # explicit kwarg overrides the policy's chip
+        pol = pol.replace(chip=chip)
+    chip = pol.chip
+    cache = get_cache() if cache is None else cache
+    interpret = pol.resolved_interpret
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, tq, heads, d)), dtype)
+    kv = jnp.asarray(rng.normal(size=(1, tk, heads, d)), dtype)
+    do = jnp.asarray(rng.normal(size=(1, tq, heads, d)), dtype)
+    o, lse = _ops.flash_attention_fwd(q, kv, kv, causal=causal, policy=pol)
+    itemsize = jnp.dtype(dtype).itemsize
+
+    return _sweep(
+        "flash_bwd", f"flash_bwd {tq}x{tk}xd{d} {np.dtype(dtype).name}",
+        _space.flash_bwd_candidates(tq, tk, d, itemsize, chip=chip,
+                                    max_candidates=max_candidates),
+        lambda cfg: _timer(
+            lambda x, y, oo, g, l, c=cfg: _ops.flash_attention_bwd(
+                x, y, y, oo, g, l, causal=causal, policy=pol, block=c),
+            (q, kv, o, do, lse), interpret, warmup, iters),
+        lambda cfg, meta: cache.put_flash_bwd(tq, tk, d, dtype, pol, cfg,
+                                              **meta),
+        cache, save, pol.kernel_fingerprint)
+
+
+def model_attention_shapes(cfg, batch: int, seq: int,
+                           backward: bool = False,
+                           decode_len: int | None = None) -> list[tuple]:
+    """The flash-kernel shapes a (batch, seq) step of `cfg` runs, as
+    deduplicated ``(op, tq, tk, d, "-")`` entries — op "flash" (fused
+    forward), "flash_bwd" (training backward, with backward=True) or
+    "flash_decode" (``(op, 1, decode_len, d, "-")``, when a cache depth
+    is given). Entries mirror model_gemm_shapes' 5-tuple layout so
+    warm_start can interleave the two lists in one report.
+
+    Attention shapes are per (batch x head) slice, so `batch` does not
+    enter the keys — it is accepted for signature symmetry. Pure-SSM
+    configs (no attention anywhere) contribute nothing."""
+    del batch
+    if getattr(cfg, "family", None) == "ssm" or \
+            not getattr(cfg, "n_heads", 0):
+        return []
+    head_dim = getattr(cfg, "resolved_head_dim",
+                       cfg.head_dim or cfg.d_model // cfg.n_heads)
+    entries = set()
+    if seq > 1:
+        entries.add(("flash", seq, seq, head_dim, "-"))
+        if backward:
+            entries.add(("flash_bwd", seq, seq, head_dim, "-"))
+    if decode_len:
+        entries.add(("flash_decode", 1, decode_len, head_dim, "-"))
+    return sorted(entries)
+
+
 def model_gemm_shapes(cfg, batch: int, seq: int,
                       backward: bool = False,
                       quant: bool = False) -> list[tuple]:
@@ -365,6 +494,7 @@ def warm_start(
     backend: str | None = None,         # deprecated string shim
     autotune: bool = False,
     backward: bool = False,
+    decode_len: int | None = None,
     cache: TuningCache | None = None,
     iters: int = 2,
     max_candidates: int = 8,
@@ -372,13 +502,16 @@ def warm_start(
     """Launcher startup hook (launch/serve.py, launch/train.py).
 
     Loads the tuning cache and checks it for the model's hot GEMM
-    shapes — `seq` may be an int or an iterable of sequence lengths
-    (serving warms both the prefill rows batch*prompt_len and the
-    decode rows batch*1). With autotune=False this only reports
-    coverage — misses fall back to the static chooser at run time, so
-    serving never blocks on a sweep. With autotune=True the misses are
-    tuned and persisted before the first step; a shape whose sweep
-    fails outright is reported under "failed" and left to the fallback.
+    shapes AND flash-attention shapes — `seq` may be an int or an
+    iterable of sequence lengths (serving warms both the prefill rows
+    batch*prompt_len and the decode rows batch*1); `decode_len` (the KV
+    cache depth) adds the flash_decode shape, and backward=True adds
+    both the cotangent GEMMs and the flash_bwd shape. With
+    autotune=False this only reports coverage — misses fall back to the
+    static chooser at run time, so serving never blocks on a sweep.
+    With autotune=True the misses are tuned and persisted before the
+    first step; a shape whose sweep fails outright is reported under
+    "failed" and left to the fallback.
 
     `policy` is the execution policy whose kernel fingerprint keys the
     cache entries (launchers pass the policy they will run under;
@@ -391,7 +524,11 @@ def warm_start(
     shapes = sorted({s for q in seqs
                      for s in model_gemm_shapes(cfg, batch, q,
                                                 backward=backward,
-                                                quant=pol.quant == "int8")})
+                                                quant=pol.quant == "int8")}
+                    | {s for q in seqs
+                       for s in model_attention_shapes(
+                           cfg, batch, q, backward=backward,
+                           decode_len=decode_len)})
     hits, misses, tuned, failed = [], [], [], []
     for entry in shapes:
         op, m, n, k, ep = entry
@@ -400,6 +537,12 @@ def warm_start(
         elif op == "matmul_q":
             hit = cache.get_matmul_q(m, n, k, dtype, pol,
                                      epilogue=ep) is not None
+        elif op == "flash":
+            hit = cache.get_flash(m, n, k, dtype, pol) is not None
+        elif op == "flash_bwd":
+            hit = cache.get_flash_bwd(m, n, k, dtype, pol) is not None
+        elif op == "flash_decode":
+            hit = cache.get_flash_decode(n, k, dtype, pol) is not None
         else:
             hit = cache.get_matmul(m, n, k, dtype, pol,
                                    epilogue=ep) is not None
@@ -409,6 +552,21 @@ def warm_start(
             try:
                 if op == "gated":
                     tune_gated_matmul(m, n, k, dtype, policy=pol,
+                                      cache=cache, iters=iters,
+                                      max_candidates=max_candidates,
+                                      save=False)
+                elif op == "flash":
+                    tune_flash_attention(m, n, k, dtype, policy=pol,
+                                         cache=cache, iters=iters,
+                                         max_candidates=max_candidates,
+                                         save=False)
+                elif op == "flash_bwd":
+                    tune_flash_bwd(m, n, k, dtype, policy=pol,
+                                   cache=cache, iters=iters,
+                                   max_candidates=max_candidates,
+                                   save=False)
+                elif op == "flash_decode":
+                    tune_flash_decode(n, k, dtype, policy=pol,
                                       cache=cache, iters=iters,
                                       max_candidates=max_candidates,
                                       save=False)

@@ -104,6 +104,22 @@ def flash_key(tq: int, tk: int, d: int, dtype, backend) -> str:
     return f"flash|{tq}x{tk}xd{d}|{np.dtype(dtype).name}|{_backend_tag(backend)}"
 
 
+def flash_decode_key(tk: int, d: int, dtype, backend) -> str:
+    """The decode kernel is q_len=1 by construction, so its shape key is
+    just (cache depth, head dim) — every slot depth shares one entry
+    (pos streams as data, not a trace constant)."""
+    return (f"flash_decode|{tk}xd{d}|{np.dtype(dtype).name}|"
+            f"{_backend_tag(backend)}")
+
+
+def flash_bwd_key(tq: int, tk: int, d: int, dtype, backend) -> str:
+    """Backward winners get their own population: the two-sweep bwd
+    kernel's working set (dK/dV accumulators + q/do/lse/delta streams)
+    shifts the optimum away from the forward's."""
+    return (f"flash_bwd|{tq}x{tk}xd{d}|{np.dtype(dtype).name}|"
+            f"{_backend_tag(backend)}")
+
+
 class TuningCache:
     """In-memory view of one fingerprint's entries, backed by the JSON
     file. `save()` is read-modify-write so caches for other fingerprints
@@ -233,6 +249,32 @@ class TuningCache:
     def put_flash(self, tq: int, tk: int, d: int, dtype, backend,
                   cfg: FlashBlockConfig, **meta: Any) -> str:
         key = flash_key(tq, tk, d, dtype, backend)
+        self.put(key, {"bq": cfg.bq, "bk": cfg.bk, "tuned_at": _now(), **meta})
+        return key
+
+    def get_flash_decode(self, tk: int, d: int, dtype,
+                         backend) -> Optional[FlashBlockConfig]:
+        e = self.get(flash_decode_key(tk, d, dtype, backend))
+        if e is None:
+            return None
+        return FlashBlockConfig(bq=1, bk=int(e["bk"]))
+
+    def put_flash_decode(self, tk: int, d: int, dtype, backend,
+                         cfg: FlashBlockConfig, **meta: Any) -> str:
+        key = flash_decode_key(tk, d, dtype, backend)
+        self.put(key, {"bk": cfg.bk, "tuned_at": _now(), **meta})
+        return key
+
+    def get_flash_bwd(self, tq: int, tk: int, d: int, dtype,
+                      backend) -> Optional[FlashBlockConfig]:
+        e = self.get(flash_bwd_key(tq, tk, d, dtype, backend))
+        if e is None:
+            return None
+        return FlashBlockConfig(bq=int(e["bq"]), bk=int(e["bk"]))
+
+    def put_flash_bwd(self, tq: int, tk: int, d: int, dtype, backend,
+                      cfg: FlashBlockConfig, **meta: Any) -> str:
+        key = flash_bwd_key(tq, tk, d, dtype, backend)
         self.put(key, {"bq": cfg.bq, "bk": cfg.bk, "tuned_at": _now(), **meta})
         return key
 

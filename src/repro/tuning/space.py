@@ -123,3 +123,68 @@ def flash_candidates(
     if max_candidates is not None:
         out = out[:max(1, max_candidates)]
     return out
+
+
+def flash_decode_candidates(
+    tk: int,
+    d: int,
+    itemsize: int,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+    max_candidates: int | None = None,
+) -> list[FlashBlockConfig]:
+    """Feasible K/V tiles for the q_len=1 decode kernel. bq is pinned to
+    1 by construction, so the space is one-dimensional: bk divisors of
+    the cache depth. Larger bk deepens the DMA pipeline but coarsens the
+    prefix skip (a near-empty cache still streams one full block), which
+    is exactly the trade the timer should settle."""
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    default = blocking.choose_decode_config(tk, d, itemsize, chip=chip)
+    out = [default]
+    seen = {default.bk}
+    for bk in _FBK:
+        bk = min(bk, tk)
+        if tk % bk or bk in seen:
+            continue
+        cfg = FlashBlockConfig(1, bk)
+        if cfg.vmem_bytes(d, itemsize) > budget:
+            continue
+        seen.add(bk)
+        out.append(cfg)
+    if max_candidates is not None:
+        out = out[:max(1, max_candidates)]
+    return out
+
+
+def flash_bwd_candidates(
+    tq: int,
+    tk: int,
+    d: int,
+    itemsize: int,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+    max_candidates: int | None = None,
+) -> list[FlashBlockConfig]:
+    """Feasible (bq, bk) tiles for the two-sweep flash backward. Same
+    divisor lattice as the forward, but the working set is heavier: the
+    dK/dV sweep double-buffers q AND do tiles against the k/v residents
+    and carries two f32 (bk, d) accumulators, so the VMEM filter adds
+    those terms on top of the forward model."""
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    out = []
+    seen = set()
+    for cfg in flash_candidates(tq, tk, d, itemsize, chip=chip,
+                                vmem_fraction=1.0):
+        extra = (cfg.bq * d * itemsize * 2      # do stream, double-buffered
+                 + 2 * cfg.bk * d * 4           # dk/dv f32 accumulators
+                 + 4 * cfg.bq * 4)              # lse + delta rows
+        if (cfg.bq, cfg.bk) in seen or \
+                cfg.vmem_bytes(d, itemsize) + extra > budget:
+            continue
+        seen.add((cfg.bq, cfg.bk))
+        out.append(cfg)
+    if not out:
+        out = [blocking.choose_flash_config(tq, tk, d, itemsize, chip=chip)]
+    if max_candidates is not None:
+        out = out[:max(1, max_candidates)]
+    return out

@@ -196,6 +196,61 @@ def test_vjp_inherits_ambient_policy(a32, monkeypatch):
 # deprecation shims
 # ----------------------------------------------------------------------
 
+def test_attention_follows_ambient_policy_with_deprecation(a32):
+    """The old carve-out (attention silently pinned to xla unless given
+    an explicit policy) is gone: under an ambient pallas scope the
+    kernel path runs, announced by a one-time deprecation warning."""
+    from repro.models.attention import attention
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 16)), jnp.float32)
+    pol = Policy(backend="pallas", interpret=True)
+    explicit = attention(q, q, q, causal=True, window=None, chunk=32,
+                         policy=pol)
+    pol_mod.reset_deprecation_warnings()
+    with pol.scope():
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            ambient = attention(q, q, q, causal=True, window=None, chunk=32)
+            again = attention(q, q, q, causal=True, window=None, chunk=32)
+    msgs = [x for x in w if issubclass(x.category, DeprecationWarning)
+            and "ambient" in str(x.message)]
+    assert len(msgs) == 1, "carve-out removal must warn exactly once"
+    np.testing.assert_array_equal(np.asarray(ambient), np.asarray(explicit))
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(explicit))
+
+
+def test_attention_explicit_xla_policy_stays_chunked(a32):
+    """Policy(backend='xla') — explicit or ambient-default — keeps the
+    chunked composition: bitwise equality pins the same code path."""
+    from repro.models.attention import attention, chunked_attention
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 16)), jnp.float32)
+    out = attention(q, q, q, causal=True, window=None, chunk=32,
+                    policy=Policy())
+    default = attention(q, q, q, causal=True, window=None, chunk=32)
+    ref = chunked_attention(q, q, q, causal=True, window=None, chunk=32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(default), np.asarray(ref))
+
+
+def test_attention_grad_under_pallas_scope(a32):
+    """Training under an ambient pallas scope differentiates through
+    the fused custom-VJP and agrees with the xla composition."""
+    from repro.models.attention import attention
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 16)), jnp.float32)
+
+    def loss(q_):
+        return jnp.sum(attention(q_, q, q, causal=True, window=None,
+                                 chunk=32) ** 2)
+
+    g_x = jax.grad(loss)(q)
+    with Policy(backend="pallas", interpret=True).scope():
+        g_p = jax.grad(loss)(q)
+    np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_x),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_deprecation_shims_warn_exactly_once(a32):
     pol_mod.reset_deprecation_warnings()
     with warnings.catch_warnings(record=True) as rec:

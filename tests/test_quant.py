@@ -367,12 +367,18 @@ def test_warm_start_maps_entries_to_matmul_q(tmp_path):
     by_op = {}
     for e in rep["misses"]:
         by_op.setdefault(e[0], []).append(e)
-    assert set(by_op) == {"matmul_q", "matmul"}
+    # attention shapes ride along un-quantized (int8 is a weight-side
+    # policy; the flash ops stream activations only)
+    assert set(by_op) == {"matmul_q", "matmul", "flash"}
     # the only plain entry is the tied-embedding logits GEMM
     assert [(m, n) for (_, m, n, k, ep) in by_op["matmul"]] \
         == [(8, cfg.padded_vocab)]
     assert rep["backend"].endswith("_int8")
     for (op, m, n, k, ep) in rep["misses"]:
+        if op == "flash":
+            cache.put_flash(m, n, k, cfg.dtype, pol,
+                            blocking.FlashBlockConfig(128, 128))
+            continue
         put = cache.put_matmul_q if op == "matmul_q" else cache.put_matmul
         put(m, n, k, cfg.dtype, pol, blocking.BlockConfig(8, 128, 128),
             epilogue=ep)

@@ -140,6 +140,52 @@ def test_inactive_slot_leaves_cache_untouched():
                                       np.asarray(new[:, 1]))
 
 
+def test_engine_flash_decode_token_exact_pallas():
+    """Serving under a pallas policy: every single-token step must route
+    through the flash_decode kernel (spied at the kernel module), and
+    the engine — bucketed prefill + per-slot vector-pos decode + a
+    mid-stream admission — must emit exactly the reference tokens
+    computed under the SAME policy (whole-prompt prefill + scalar-pos
+    lock-step decode), i.e. the batching machinery adds nothing."""
+    from repro.core.policy import Policy
+    from repro.kernels import flash_attention as fa
+
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pol = Policy(backend="pallas", interpret=True)
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in CASES["qwen3-0.6b"]]
+
+    calls = []
+    orig = fa.flash_decode
+
+    def spy(*a, **kw):
+        calls.append(a[0].shape)
+        return orig(*a, **kw)
+
+    fa.flash_decode = spy
+    try:
+        eng = ServingEngine(cfg, params, max_slots=2, max_len=64,
+                            policy=pol)
+        reqs = [eng.submit(p, g) for p, g in zip(prompts, GENS)]
+        report = eng.run()
+    finally:
+        fa.flash_decode = orig
+
+    assert report["n_finished"] == len(reqs)
+    assert calls, "pallas-policy decode never reached the flash kernel"
+    assert all(shape[1] == 1 for shape in calls)   # q_len=1 by contract
+    admitted = sorted(r.t_admitted for r in reqs)
+    finished = sorted(r.t_finished for r in reqs)
+    assert admitted[-1] > finished[0], "expected a mid-stream admission"
+
+    with pol.scope():
+        for req, prompt, g in zip(reqs, prompts, GENS):
+            want = _reference_generate(cfg, params, prompt, g)
+            assert req.generated == want, (req.rid, req.generated, want)
+
+
 def test_scheduler_fcfs_and_release():
     sched = SlotScheduler(2)
     reqs = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new_tokens=2,

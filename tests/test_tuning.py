@@ -148,9 +148,61 @@ def test_warm_start_reports_then_hits(tmp_cache):
     cfg = get_config("qwen3-0.6b", reduced=True)
     rep = autotuner.warm_start(cfg, batch=2, seq=16, autotune=False)
     assert rep["tuned"] == [] and rep["hits"] == []
-    assert len(rep["misses"]) == len(autotuner.model_gemm_shapes(cfg, 2, 16))
+    expected = (len(autotuner.model_gemm_shapes(cfg, 2, 16))
+                + len(autotuner.model_attention_shapes(cfg, 2, 16)))
+    assert len(rep["misses"]) == expected
     rep2 = autotuner.warm_start(cfg, batch=2, seq=16, autotune=True,
                                 iters=1, max_candidates=2)
     assert len(rep2["tuned"]) == len(rep["misses"])
     rep3 = autotuner.warm_start(cfg, batch=2, seq=16, autotune=False)
     assert len(rep3["hits"]) == len(rep["misses"]) and rep3["misses"] == []
+
+
+def test_warm_start_covers_attention_shapes(tmp_cache):
+    from repro.configs import get_config
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    rep = autotuner.warm_start(cfg, batch=2, seq=16, autotune=False,
+                               backward=True, decode_len=64)
+    ops_seen = {e[0] for e in rep["misses"]}
+    assert {"flash", "flash_bwd", "flash_decode"} <= ops_seen
+
+
+def test_model_attention_shapes_skips_ssm():
+    from repro.configs import get_config
+    cfg = get_config("mamba2-2.7b", reduced=True)
+    assert autotuner.model_attention_shapes(cfg, 2, 16) == []
+
+
+def test_flash_decode_candidates_divide_cache():
+    cands = space.flash_decode_candidates(2048, 64, itemsize=2)
+    assert all(c.bq == 1 and 2048 % c.bk == 0 for c in cands)
+    assert len({c.bk for c in cands}) == len(cands)
+    from repro.core import blocking
+    assert cands[0] == blocking.choose_decode_config(2048, 64, 2)
+
+
+def test_flash_bwd_candidates_feasible():
+    cands = space.flash_bwd_candidates(1024, 2048, 128, itemsize=2)
+    assert cands and all(1024 % c.bq == 0 and 2048 % c.bk == 0
+                         for c in cands)
+
+
+def test_tune_flash_decode_populates_cache(tmp_cache):
+    pol_fp = "pallas_interpret"
+    res = autotuner.tune_flash_decode(256, 32, "float32", backend=pol_fp,
+                                      batch=2, warmup=0, iters=1,
+                                      max_candidates=2)
+    assert res.best_s > 0 and res.best.bq == 1
+    served = tcache.TuningCache(tmp_cache).load().get_flash_decode(
+        256, 32, "float32", pol_fp)
+    assert served == res.best
+
+
+def test_tune_flash_bwd_populates_cache(tmp_cache):
+    pol_fp = "pallas_interpret"
+    res = autotuner.tune_flash_bwd(256, 256, 32, "float32", backend=pol_fp,
+                                   warmup=0, iters=1, max_candidates=2)
+    assert res.best_s > 0
+    served = tcache.TuningCache(tmp_cache).load().get_flash_bwd(
+        256, 256, 32, "float32", pol_fp)
+    assert served == res.best
