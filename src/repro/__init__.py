@@ -48,6 +48,7 @@ _EXPORTS = {
     "flash_attention": ("repro.kernels.ops", "flash_attention"),
     "flash_attention_bwd": ("repro.kernels.ops", "flash_attention_bwd"),
     "flash_decode": ("repro.kernels.ops", "flash_decode"),
+    "flash_decode_paged": ("repro.kernels.ops", "flash_decode_paged"),
     "add": ("repro.kernels.ops", "add"),
     "sub": ("repro.kernels.ops", "sub"),
     # kernel registry (kernels.registry)
@@ -60,8 +61,11 @@ _EXPORTS = {
     # serving
     "ServingEngine": ("repro.serving", "ServingEngine"),
     "Request": ("repro.serving", "Request"),
+    "KVPagePool": ("repro.serving", "KVPagePool"),
+    "KVPoolExhausted": ("repro.serving", "KVPoolExhausted"),
     "make_sampler": ("repro.serving", "make_sampler"),
     "synthetic_trace": ("repro.serving", "synthetic_trace"),
+    "prefix_heavy_trace": ("repro.serving", "prefix_heavy_trace"),
     # tuning
     "TuningCache": ("repro.tuning", "TuningCache"),
     "tune_matmul": ("repro.tuning", "tune_matmul"),
@@ -69,6 +73,7 @@ _EXPORTS = {
     "tune_flash_attention": ("repro.tuning", "tune_flash_attention"),
     "tune_flash_bwd": ("repro.tuning", "tune_flash_bwd"),
     "tune_flash_decode": ("repro.tuning", "tune_flash_decode"),
+    "tune_flash_decode_paged": ("repro.tuning", "tune_flash_decode_paged"),
     "warm_start": ("repro.tuning", "warm_start"),
     "default_exec_policy": ("repro.tuning", "default_exec_policy"),
     # deprecation shims (string-backend era; warn once per process)

@@ -22,6 +22,14 @@ knob into a frozen, hashable dataclass:
                     dense layers through core.gemm.dense_q and the
                     matmul_q kernel op; core.precision holds the
                     quantize/dequantize machinery)
+    kv_layout       serving KV cache layout: "dense" (one contiguous
+                    max_len row per slot) | "paged" (page pool with
+                    slot->page-table indirection and copy-on-write
+                    prefix sharing, serving.kv_pool)
+    quant_kv        KV-cache quantization: "off" | "int8" (int8 pages
+                    + per-(position, head) f32 scales, dequantized on
+                    the f32 accumulator inside the decode kernel;
+                    paged layout only)
 
 Because it is frozen and hashable it works as a jit static argument and
 a custom_vjp nondiff argument: identical policies never retrace, and a
@@ -60,6 +68,18 @@ AUTOTUNE_MODES = ("off", "cached")
 #: tests/test_quant.py pins the two tuples against each other).
 QUANT_MODES = ("off", "int8")
 
+#: KV-cache layout: "dense" keeps one contiguous max_len row per slot
+#: (PR 2); "paged" routes the serving cache through the page pool
+#: (serving.kv_pool) with slot->page-table indirection and prefix
+#: sharing, decoded by the paged flash kernel.
+KV_LAYOUTS = ("dense", "paged")
+
+#: KV-cache quantization: int8 pages with per-(position, head) f32
+#: scales, quantized at page-write time and dequantized on the f32
+#: accumulator inside the decode kernel. Requires kv_layout="paged"
+#: (the dense cache never grew a scale plane; the engine enforces it).
+QUANT_KV_MODES = ("off", "int8")
+
 ENV_VAR = "REPRO_POLICY"
 
 
@@ -72,6 +92,8 @@ class Policy:
     fuse_epilogues: bool = True
     out_dtype: Optional[str] = None
     quant: str = "off"
+    kv_layout: str = "dense"
+    quant_kv: str = "off"
 
     def __post_init__(self):
         if self.autotune not in AUTOTUNE_MODES:
@@ -82,6 +104,14 @@ class Policy:
             raise ValueError(
                 f"unknown quant mode {self.quant!r}; "
                 f"expected one of {QUANT_MODES}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(
+                f"unknown kv_layout {self.kv_layout!r}; "
+                f"expected one of {KV_LAYOUTS}")
+        if self.quant_kv not in QUANT_KV_MODES:
+            raise ValueError(
+                f"unknown quant_kv mode {self.quant_kv!r}; "
+                f"expected one of {QUANT_KV_MODES}")
         if self.interpret is not None and not isinstance(self.interpret, bool):
             raise ValueError(f"interpret must be None or bool, "
                              f"got {self.interpret!r}")
@@ -109,13 +139,22 @@ class Policy:
         backend component, so existing tuning.json files stay valid:
         quant="off" (the historical state) adds nothing, while
         quant="int8" appends "_int8" — quantized-kernel winners get
-        their own key population without invalidating old entries."""
+        their own key population without invalidating old entries.
+        kv_layout="paged" / quant_kv="int8" follow the same rule:
+        defaults add nothing (old fingerprints stay byte-identical),
+        non-defaults append "_paged" / "_kvint8"."""
         if self.backend == "xla":
             base = "xla"
         else:
             base = (f"{self.backend}_interpret" if self.resolved_interpret
                     else self.backend)
-        return base if self.quant == "off" else f"{base}_{self.quant}"
+        if self.quant != "off":
+            base = f"{base}_{self.quant}"
+        if self.quant_kv != "off":
+            base = f"{base}_kv{self.quant_kv}"
+        if self.kv_layout != "dense":
+            base = f"{base}_{self.kv_layout}"
+        return base
 
     def fingerprint(self) -> str:
         """Full stable description — recorded in bench JSON
@@ -133,6 +172,10 @@ class Policy:
             parts.append(f"out_dtype={self.out_dtype}")
         if self.quant != "off":
             parts.append(f"quant={self.quant}")
+        if self.kv_layout != "dense":
+            parts.append(f"kv_layout={self.kv_layout}")
+        if self.quant_kv != "off":
+            parts.append(f"quant_kv={self.quant_kv}")
         return ",".join(parts)
 
     def resolved_out_dtype(self, fallback):
@@ -198,7 +241,7 @@ class Policy:
                 kw[key] = val
             elif key == "out_dtype":
                 kw[key] = val
-            elif key == "quant":
+            elif key in ("quant", "kv_layout", "quant_kv"):
                 kw[key] = val
             elif key == "chip":
                 try:
@@ -211,7 +254,7 @@ class Policy:
                 raise ValueError(
                     f"unknown policy field {key!r} in {spec!r}; expected "
                     "backend/interpret/chip/autotune/fuse_epilogues/"
-                    "out_dtype/quant")
+                    "out_dtype/quant/kv_layout/quant_kv")
         return cls(**kw)
 
 

@@ -111,6 +111,22 @@ def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return q.astype(scale.dtype) * scale
 
 
+#: QuantSpec for KV-cache rows: the contraction axis of a K/V row is
+#: head_dim (the last axis — q.k reduces over it), so the amax reduce
+#: runs over -1 and yields one f32 scale per (position, kv-head).
+KV_QUANT_SPEC = QuantSpec(mode="int8", axis=-1)
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Quantize K/V rows for int8 KV pages: per-(position, head)
+    symmetric int8 over the head_dim axis — the axis the decode dot
+    contracts. Returns ``(q, scale)`` with the keepdims singleton
+    squeezed off the scale (page pools store scales as their own
+    (..., position, head) plane, not broadcast against head_dim)."""
+    q, scale = quantize(x, KV_QUANT_SPEC)
+    return q, jnp.squeeze(scale, axis=-1)
+
+
 def quant_error_bound(scale: jnp.ndarray) -> jnp.ndarray:
     """Tight per-element reconstruction bound: |deq - w| <= scale / 2
     (round-to-nearest on the symmetric grid; no clipping error because

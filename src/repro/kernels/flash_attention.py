@@ -543,3 +543,182 @@ def flash_decode(
         interpret=interpret,
         **params,
     )(q, k, v, pos_op)
+
+
+# ----------------------------------------------------------------------
+# Paged decode kernel (K/V gathered through a slot page table)
+# ----------------------------------------------------------------------
+#
+# The serving cache is a pool of (page_size, Hkv, d) pages shared across
+# slots (serving.kv_pool); each slot owns a page-table row mapping its
+# logical pages onto pool indices. The table and the per-slot pos vector
+# ride in as SCALAR-PREFETCH operands — they land in SMEM before the
+# grid runs, so the K/V BlockSpec index maps can dereference them: grid
+# step j of slot b streams pool page table[b, j // sub_per_page], one
+# K/V page (or bk-sub-tile of it) per step. The dense kernel's
+# `k_start <= pos` block skip carries over unchanged — j*bk is still the
+# logical key offset — so a shallow slot touches only its own prefix no
+# matter where its pages sit in the pool. int8 pools dequantize on the
+# f32 accumulator inside the kernel: the per-(position, head) scales
+# stream as (P, Hkv, page_size) planes sliced by the same index map.
+
+def _flash_decode_paged_kernel(
+    table_ref, pos_ref,            # scalar-prefetch: (B, pp), (B,) SMEM
+    *refs,
+    n_steps: int, bk: int, scale: float, window: int | None, quant: bool,
+):
+    if quant:
+        q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref \
+            = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[b]
+    k_start = j * bk                  # logical key offset of this step
+
+    # Same skip as the dense decode kernel: pages past the slot's valid
+    # prefix [0, pos] never run (pos < 0 skips everything; the flush's
+    # l == 0 guard keeps o finite). Unmapped table entries (-1) only
+    # occur past the prefix, so the index-map clamp to page 0 is never
+    # read by an active step.
+    run = k_start <= pos
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > pos - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (1, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0][:, None]                 # dequant on f32
+            v = v * vs_ref[0, 0][:, None]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (1, bk)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = k_pos <= pos
+        if window is not None:
+            mask &= k_pos > pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                               # (1, LANES)
+        s_max = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, s_max)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :1])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_steps - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_paged(
+    q: jnp.ndarray,           # [B, H, D]  one new token per slot
+    kp: jnp.ndarray,          # [P, page_size, Hkv, D]  K page pool
+    vp: jnp.ndarray,          # [P, page_size, Hkv, D]  V page pool
+    table: jnp.ndarray,       # [B, pages_per_slot] int32; -1 = unmapped
+    *,
+    group: int = 1,           # H // Hkv
+    window: int | None = None,
+    scale: float | None = None,
+    pos=0,                    # scalar, or (B,) per-slot depth vector
+    ks: jnp.ndarray | None = None,   # [P, Hkv, page_size] f32 K scales
+    vs: jnp.ndarray | None = None,   # [P, Hkv, page_size] f32 V scales
+    bk: int | None = None,    # sub-page tile; must divide page_size
+    block=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """flash_decode against a paged KV pool: K/V blocks are gathered
+    through `table` by the BlockSpec index maps (table + pos are
+    scalar-prefetch SMEM operands), one page — or one bk-sub-tile of a
+    page — per grid step. Pools may be int8 with per-(position, head)
+    f32 scale planes (ks/vs): dequantization happens on the kernel's
+    f32 accumulator, so HBM streams one byte per element. Returns
+    [B, H, D]; rows with pos < 0 produce finite garbage the caller
+    discards (same contract as flash_decode)."""
+    if not _HAS_PLTPU:  # pragma: no cover
+        raise NotImplementedError(
+            "flash_decode_paged needs pallas TPU scalar prefetch "
+            "(jax.experimental.pallas.tpu unavailable)")
+    if block is not None:
+        bk = block.bk
+    b, h, d = q.shape
+    n_pages, ps, hkv, dk_ = kp.shape
+    assert d == dk_ and vp.shape == kp.shape, (q.shape, kp.shape, vp.shape)
+    assert h == hkv * group, (h, hkv, group)
+    pp = table.shape[1]
+    assert table.shape == (b, pp), (table.shape, b)
+    quant = ks is not None
+    if quant:
+        assert vs is not None
+        assert ks.shape == vs.shape == (n_pages, hkv, ps), \
+            (ks.shape, n_pages, hkv, ps)
+    bk = ps if bk is None else min(bk, ps)
+    assert ps % bk == 0, (ps, bk)
+    spp = ps // bk                    # grid sub-steps per page
+    n_steps = pp * spp
+    scale = scale if scale is not None else d ** -0.5
+
+    pos_op = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    table = jnp.asarray(table, jnp.int32)
+
+    def page_map(bi, hi, j, t, p, g=group, s=spp):
+        # -1 (unmapped) clamps to pool page 0; such steps never run.
+        return (jnp.maximum(t[bi, j // s], 0), j % s, hi // g, 0)
+
+    def scale_map(bi, hi, j, t, p, g=group, s=spp):
+        return (jnp.maximum(t[bi, j // s], 0), hi // g, j % s)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, d), lambda bi, hi, j, t, p: (bi, hi, 0)),
+        pl.BlockSpec((1, bk, 1, d), page_map),
+        pl.BlockSpec((1, bk, 1, d), page_map),
+    ]
+    operands = [q, kp, vp]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, bk), scale_map)] * 2
+        operands += [ks, vs]
+
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, n_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi, j, t, p:
+                               (bi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, _LANES), jnp.float32),
+            pltpu.VMEM((1, _LANES), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _flash_decode_paged_kernel, n_steps=n_steps, bk=bk,
+            scale=scale, window=window, quant=quant),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+        **params,
+    )(table, pos_op, *operands)

@@ -22,6 +22,9 @@ Execution selection is typed: every public op takes a
                 style two-sweep kernel, S/P never in HBM)
     flash_decode  xla (ref composition) | pallas (q_len=1 kernel,
                 prefix-only K/V streaming)
+    flash_decode_paged  xla (page-gather + ref composition) | pallas
+                (scalar-prefetched page-table gather, optional int8
+                in-kernel dequant)
     add / sub   xla | pallas/naive (elementwise kernel)
 
 `policy.interpret` (None = auto off-TPU) decides interpreter vs.
@@ -615,6 +618,66 @@ def flash_decode(
     impl = _registry.get_impl("flash_decode", pol.backend)
     return impl(q, k, v, policy=pol, pos=pos, window=window, bk=bk,
                 block=block)
+
+
+@register_op("flash_decode_paged", backend="xla")
+def _flash_decode_paged_xla(q, kp, vp, table, *, policy, pos, window,
+                            ks, vs, bk, block):
+    return _ref.flash_decode_paged_ref(
+        q, kp, vp, table, pos=pos, window=window, ks=ks, vs=vs)
+
+
+@register_op("flash_decode_paged", backend="pallas")
+def _flash_decode_paged_pallas(q, kp, vp, table, *, policy, pos, window,
+                               ks, vs, bk, block):
+    b_, tq, h, d = q.shape
+    ps = kp.shape[1]
+    hkv = kp.shape[2]
+    if block is None and policy.autotune == "cached":
+        block = _tcache.get_cache().get_flash_decode_paged(
+            ps, d, q.dtype, policy)
+    if block is not None:
+        bk = block.bk
+    o = _fa.flash_decode_paged(
+        q[:, 0], kp, vp, table, group=h // hkv, window=window, pos=pos,
+        ks=ks, vs=vs, bk=bk, interpret=policy.resolved_interpret)
+    return o[:, None]
+
+
+def flash_decode_paged(
+    q: jnp.ndarray,            # [B, 1, H, D]  one new token per slot
+    kp: jnp.ndarray,           # [P, page_size, Hkv, D]  K page pool
+    vp: jnp.ndarray,           # [P, page_size, Hkv, D]  V page pool
+    table: jnp.ndarray,        # [B, pages_per_slot] int32; -1 unmapped
+    *,
+    pos=0,                     # scalar, or (B,) per-slot depth vector
+    window: int | None = None,
+    ks: jnp.ndarray | None = None,    # [P, Hkv, page_size] f32 scales
+    vs: jnp.ndarray | None = None,    # (int8 pools only)
+    policy: Policy | None = None,
+    backend: str | None = None,
+    bk: int | None = None,
+    block: blocking.FlashBlockConfig | None = None,
+) -> jnp.ndarray:
+    """flash_decode against a paged KV pool (serving.kv_pool layout):
+    slot b's logical page j lives at pool index table[b, j]. The pallas
+    backend gathers pages through scalar-prefetched table rows and —
+    for int8 pools — dequantizes on the f32 accumulator in-kernel; the
+    xla backend is the gather + masked-softmax composition
+    (ref.flash_decode_paged_ref), conformance-tested per backend in
+    tests/test_property.py. Same pos/window/inactive-slot contract as
+    flash_decode."""
+    assert q.shape[1] == 1, \
+        f"flash_decode_paged is q_len=1 only: {q.shape}"
+    assert kp.shape == vp.shape and kp.ndim == 4, (kp.shape, vp.shape)
+    assert (ks is None) == (vs is None)
+    if ks is not None:
+        assert kp.dtype == jnp.int8, \
+            f"scale planes supplied for a {kp.dtype} pool"
+    pol = _policy.resolve(policy, backend)
+    impl = _registry.get_impl("flash_decode_paged", pol.backend)
+    return impl(q, kp, vp, table, policy=pol, pos=pos, window=window,
+                ks=ks, vs=vs, bk=bk, block=block)
 
 
 # ----------------------------------------------------------------------

@@ -172,6 +172,50 @@ def attention_fwd_ref(
     return out.astype(q.dtype), lse
 
 
+def paged_gather_ref(
+    kp: jnp.ndarray,             # [P, page_size, Hkv, D] page pool
+    table: jnp.ndarray,          # [B, pages_per_slot] int32; -1 unmapped
+    scales: jnp.ndarray | None = None,   # [P, Hkv, page_size] f32
+) -> jnp.ndarray:
+    """Materialise each slot's logical K/V tensor from the page pool:
+    logical page j of slot b is pool page table[b, j], covering key
+    positions [j*page_size, (j+1)*page_size). Unmapped entries clamp to
+    page 0 — the caller's causal mask (pos < j*page_size) hides them.
+    int8 pools dequantize against the per-(position, head) scales.
+    Returns [B, pages_per_slot*page_size, Hkv, D]."""
+    b, pp = table.shape
+    n_pages, ps, hkv, d = kp.shape
+    idx = jnp.maximum(jnp.asarray(table, jnp.int32), 0)
+    gathered = kp[idx]                          # (B, pp, ps, Hkv, D)
+    if scales is not None:
+        s = scales[idx]                         # (B, pp, Hkv, ps)
+        gathered = gathered.astype(jnp.float32) \
+            * s.transpose(0, 1, 3, 2)[..., None]
+    return gathered.reshape(b, pp * ps, hkv, d)
+
+
+def flash_decode_paged_ref(
+    q: jnp.ndarray,              # [B, 1, H, D]
+    kp: jnp.ndarray,             # [P, page_size, Hkv, D]
+    vp: jnp.ndarray,
+    table: jnp.ndarray,          # [B, pages_per_slot] int32
+    *,
+    pos=0,                       # scalar or (B,) per-slot depth
+    window: int | None = None,
+    scale: float | None = None,
+    ks: jnp.ndarray | None = None,
+    vs: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Dense oracle for the paged decode kernel: gather + dequantize
+    the pool through the page table, then the masked attention_fwd_ref
+    at q_offset=pos. Returns [B, 1, H, D]."""
+    k = paged_gather_ref(kp, table, ks)
+    v = paged_gather_ref(vp, table, vs)
+    out, _ = attention_fwd_ref(q, k, v, causal=True, window=window,
+                               scale=scale, q_offset=pos)
+    return out.astype(q.dtype)
+
+
 def attention_bwd_ref(
     q: jnp.ndarray,              # [B, Tq, H, D]
     k: jnp.ndarray,              # [B, Tk, Hkv, D]

@@ -31,12 +31,21 @@ from repro.core import policy as policy_mod
 from repro.core.policy import LEGACY_BACKEND_NAMES, Policy
 from repro.models import model as M
 from repro.serving import DEFAULT_PREFILL_CHUNK, ServingEngine, \
-    make_sampler, synthetic_trace
+    make_sampler, prefix_heavy_trace, synthetic_trace
 
 
 def build_workload(cfg, args, rng):
-    """Synthetic trace (prompt, max_new, arrival, enc): mixed-length
-    Poisson when --requests is set, else the uniform degenerate batch."""
+    """Synthetic trace (prompt, max_new, arrival, enc): prefix-heavy
+    chat when --prefix-len is set, mixed-length Poisson when --requests
+    is set, else the uniform degenerate batch."""
+    if args.prefix_len:
+        n = args.requests or args.batch
+        return prefix_heavy_trace(cfg, n, rng=rng,
+                                  prefix_len=args.prefix_len,
+                                  suffix_range=(args.suffix_min,
+                                                args.suffix_max),
+                                  gen=args.gen,
+                                  arrival_rate=args.arrival_rate)
     if args.requests:
         len_range = (args.prompt_len_min, args.prompt_len_max)
         return synthetic_trace(cfg, args.requests, rng=rng,
@@ -94,10 +103,34 @@ def main(argv=None):
                          "(tuned = pallas with autotuner-cached tiles)")
     ap.add_argument("--autotune", action="store_true",
                     help="tune uncached GEMM shapes at startup")
+    # paged KV cache (serving.kv_pool) + prefix-heavy chat workload
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense",
+                    help="KV cache layout: per-slot rows, or a shared "
+                         "page pool with prefix sharing + copy-on-write")
+    ap.add_argument("--quant-kv", choices=("off", "int8"), default="off",
+                    help="int8 KV pages (requires --kv-layout paged)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page in paged mode")
+    ap.add_argument("--kv-pool-pages", type=int, default=0,
+                    help="physical page pool size (0 = dense-equivalent "
+                         "capacity: max_slots * pages_per_slot)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared system-prompt length: > 0 switches the "
+                         "workload to the prefix-heavy chat trace")
+    ap.add_argument("--suffix-min", type=int, default=2)
+    ap.add_argument("--suffix-max", type=int, default=12)
+    ap.add_argument("--check-exact", action="store_true",
+                    help="re-run the trace on a dense f32-KV reference "
+                         "engine and assert identical token streams "
+                         "(greedy sampling only)")
     args = ap.parse_args(argv)
+    if args.check_exact and args.sampler != "greedy":
+        ap.error("--check-exact requires --sampler greedy")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     policy = Policy.from_backend(args.backend)
+    policy = policy.replace(kv_layout=args.kv_layout, quant_kv=args.quant_kv)
     policy_mod.set_default_policy(policy)
     rng = np.random.default_rng(args.seed)
     work = build_workload(cfg, args, rng)
@@ -130,7 +163,9 @@ def main(argv=None):
     sampler = make_sampler(args.sampler, temperature=args.temperature,
                            top_k=args.top_k, seed=args.seed)
     engine = ServingEngine(cfg, params, max_slots=max_slots,
-                           max_len=max_len, sampler=sampler, policy=policy)
+                           max_len=max_len, sampler=sampler, policy=policy,
+                           page_size=args.page_size,
+                           kv_pool_pages=args.kv_pool_pages or None)
     requests = [engine.submit(p, g, arrival_time=t, enc_frames=enc)
                 for p, g, t, enc in work]
     report = engine.run()
@@ -146,7 +181,34 @@ def main(argv=None):
           f"latency p50 {report['latency_p50_s']*1e3:.0f}ms "
           f"p95 {report['latency_p95_s']*1e3:.0f}ms, "
           f"ttft p50 {report['ttft_p50_s']*1e3:.0f}ms")
+    if "kv_pool" in report:
+        kv = report["kv_pool"]
+        print(f"kv pool: {kv['n_pages']} pages x {kv['page_size']} tok, "
+              f"peak resident {kv['peak_resident']}, "
+              f"peak sharing {kv['peak_sharing_ratio']:.2f}x, "
+              f"{kv['shared_page_hits']} shared hits, "
+              f"{kv['cow_copies']} CoW copies")
     check_outputs(cfg, engine, requests)
+
+    if args.check_exact:
+        # Same trace, dense rows, full-precision KV: the paged/int8
+        # engine must emit byte-identical greedy token streams.
+        ref_pol = policy.replace(kv_layout="dense", quant_kv="off")
+        ref = ServingEngine(
+            cfg, params, max_slots=max_slots, max_len=max_len,
+            sampler=make_sampler(args.sampler, seed=args.seed),
+            policy=ref_pol)
+        ref_reqs = [ref.submit(p, g, arrival_time=t, enc_frames=enc)
+                    for p, g, t, enc in work]
+        ref.run()
+        for a, b in zip(requests, ref_reqs):
+            assert a.generated == b.generated, \
+                (a.rid, a.generated, b.generated)
+        if "kv_pool" in report and args.prefix_len:
+            assert report["kv_pool"]["peak_sharing_ratio"] > 1.0, \
+                report["kv_pool"]
+        print(f"check-exact: {len(requests)} token streams match the "
+              f"dense reference")
 
     if not args.requests:
         # degenerate mode keeps the pre-engine return contract:

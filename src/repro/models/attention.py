@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import policy as _pol
+from repro.core import precision as _prec
 from repro.core.policy import Policy
 from repro.distributed.context import constrain, current_mesh
 from repro.kernels import ops as kops
@@ -292,6 +293,10 @@ def attn_apply(
                                    # vector (decode; pos < 0 = inactive slot,
                                    # cache row left untouched)
     enc_kv: Optional[tuple] = None,  # cross-attn: precomputed (k, v)
+    kv_table: Optional[jnp.ndarray] = None,  # (B, pages_per_slot) page table:
+                                   # cache is a PAGE POOL {"k","v"[,"ks","vs"]}
+                                   # of (P, page_size, Hkv, Dh) pages instead
+                                   # of per-slot rows (decode only)
     policy: Optional[Policy] = None,
     backend: Optional[str] = None,   # deprecated string shim
 ):
@@ -334,7 +339,49 @@ def attn_apply(
         k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
 
     new_cache = None
-    if cache is not None and pos_vec:
+    if cache is not None and kv_table is not None:
+        # Paged decode: `cache` is this layer's page POOL, not per-slot
+        # rows. Each slot's k/v row lands at (table[slot, pos//ps],
+        # pos%ps) — the engine's prepare_write has already made that
+        # page privately writable (CoW), so the scatter never touches
+        # shared bytes. Inactive slots (pos < 0) and unmapped table
+        # entries route out of bounds; mode="drop" skips them.
+        assert t == 1 and pos_vec, \
+            "paged KV cache requires per-slot one-token decode steps"
+        pos = jnp.asarray(cache_pos, jnp.int32)
+        n_pages, page_sz = cache["k"].shape[0], cache["k"].shape[1]
+        bidx = jnp.arange(pos.shape[0])
+        pj = jnp.where(pos < 0, 0, pos // page_sz)
+        phys = kv_table[bidx, pj]
+        phys = jnp.where((pos < 0) | (phys < 0), n_pages, phys)
+        off = pos % page_sz
+        new_cache = dict(cache)
+        if "ks" in cache:
+            # int8 pages: quantize at page-write; the kernel dequantizes
+            # on the f32 accumulator. Scale planes are (P, Hkv, ps) so a
+            # page's scales sit lane-contiguous next to its rows.
+            kq, ksc = _prec.quantize_kv(k[:, 0])
+            vq, vsc = _prec.quantize_kv(v[:, 0])
+            new_cache["k"] = cache["k"].at[phys, off].set(kq, mode="drop")
+            new_cache["v"] = cache["v"].at[phys, off].set(vq, mode="drop")
+            new_cache["ks"] = cache["ks"].at[phys, :, off].set(
+                ksc, mode="drop")
+            new_cache["vs"] = cache["vs"].at[phys, :, off].set(
+                vsc, mode="drop")
+        else:
+            new_cache["k"] = cache["k"].at[phys, off].set(
+                k[:, 0].astype(cache["k"].dtype), mode="drop")
+            new_cache["v"] = cache["v"].at[phys, off].set(
+                v[:, 0].astype(cache["v"].dtype), mode="drop")
+        # Only pallas/xla have a paged gather; other backends reroute to
+        # the dense XLA oracle (same math through paged_gather_ref).
+        pol_r = pol if pol.backend in ("pallas", "xla") \
+            else pol.replace(backend="xla")
+        out = kops.flash_decode_paged(
+            q, new_cache["k"], new_cache["v"], kv_table, pos=pos,
+            window=cfg.window, ks=new_cache.get("ks"),
+            vs=new_cache.get("vs"), policy=pol_r)
+    elif cache is not None and pos_vec:
         # Continuous-batching decode: each slot scatters its single k/v
         # row at its own position — O(B) rows written, not O(cache).
         # pos < 0 (inactive slot) maps out of bounds and mode="drop"

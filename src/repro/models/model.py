@@ -206,6 +206,41 @@ def init_cache(cfg, batch: int, max_len: int, enc_len: int = 0):
     raise ValueError(fam)
 
 
+def init_paged_cache(cfg, n_pages: int, page_size: int, max_slots: int,
+                     pages_per_slot: int, *, quant_kv: str = "off"):
+    """Page-pool KV cache for continuous-batching decode (see
+    serving.kv_pool for the host-side bookkeeping). Layout:
+
+        {"pages": {"k", "v": (L, n_pages, page_size, Hkv, Dh)
+                   [, "ks", "vs": (L, n_pages, Hkv, page_size) f32]},
+         "table": (max_slots, pages_per_slot) int32, -1 = unmapped}
+
+    quant_kv="int8" stores int8 pages plus per-(position, head) f32
+    scale planes; the decode kernel dequantizes on its f32 accumulator.
+    Attention-cache families only — ssm/hybrid state is recurrent, not
+    token-addressed, so pages don't apply (and encdec's cross cache is
+    read-only whole-sequence)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged KV cache supports dense/moe/vlm, not {cfg.family!r}")
+    dh = cfg.resolved_head_dim
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, dh)
+    if quant_kv == "int8":
+        pages = {"k": jnp.zeros(shape, jnp.int8),
+                 "v": jnp.zeros(shape, jnp.int8),
+                 "ks": jnp.zeros(shape[:2] + (cfg.n_kv_heads, page_size),
+                                 jnp.float32),
+                 "vs": jnp.zeros(shape[:2] + (cfg.n_kv_heads, page_size),
+                                 jnp.float32)}
+    elif quant_kv == "off":
+        dtype = jnp.dtype(cfg.dtype)
+        pages = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    else:
+        raise ValueError(f"unknown quant_kv {quant_kv!r}")
+    return {"pages": pages,
+            "table": jnp.full((max_slots, pages_per_slot), -1, jnp.int32)}
+
+
 # ----------------------------------------------------------------------
 # prefill / decode
 # ----------------------------------------------------------------------
@@ -262,9 +297,18 @@ def decode_step(cfg, params, token, pos, cache):
                 jnp.asarray(pos, jnp.int32).reshape((-1, 1, 1)), (b, 1, 3)) \
                 if cfg.mrope_sections else None
         x = _embed_inputs(cfg, params, batch)
-        x, cache, _ = T.stack_apply(params["layers"], x, cfg,
-                                    positions=batch.get("positions"),
-                                    caches=cache, cache_pos=pos)
+        if isinstance(cache, dict) and "pages" in cache:
+            # Paged cache (init_paged_cache): scan the page pools as
+            # layer xs, close over the layer-less table.
+            x, pages, _ = T.stack_apply(params["layers"], x, cfg,
+                                        positions=batch.get("positions"),
+                                        caches=cache["pages"], cache_pos=pos,
+                                        kv_table=cache["table"])
+            cache = {"pages": pages, "table": cache["table"]}
+        else:
+            x, cache, _ = T.stack_apply(params["layers"], x, cfg,
+                                        positions=batch.get("positions"),
+                                        caches=cache, cache_pos=pos)
     elif fam == "ssm":
         x = _embed_inputs(cfg, params, batch)
         x, cache = T.ssm_stack_apply(params["layers"], x, cfg,

@@ -261,6 +261,67 @@ def attention_bwd_savings(tq: int, tk: int, d: int, itemsize: int,
             "saved_frac": 1.0 - fused / unfused, "cfg": cfg}
 
 
+# ----------------------------------------------------------------------
+# KV-cache traffic + capacity models (paged / quantized serving)
+# ----------------------------------------------------------------------
+
+def kv_decode_traffic_bytes(pos: int, heads: int, d: int, itemsize: int,
+                            *, quant_kv: str = "off") -> int:
+    """HBM bytes ONE decode step streams from the KV cache for one slot
+    at depth `pos`, summed over K and V: (pos + 1) resident rows per
+    side, each `heads * d` elements. quant_kv="int8" rows are 1
+    byte/element plus a 4-byte f32 scale per (position, head) — the
+    scale planes ride along with the pages, so they are charged here."""
+    rows = 2 * (pos + 1) * heads
+    if quant_kv == "int8":
+        return rows * (d + 4)
+    return rows * d * itemsize
+
+
+def kv_quant_savings(pos: int, heads: int, d: int, itemsize: int) -> dict:
+    """Fractional KV-byte saving per decode step of int8 pages over
+    full-width rows — the number benchmarks/bench_serving.py asserts
+    (>= 40%). Decode attention is KV-bandwidth-bound (q is one row, the
+    cache is thousands), so byte savings here are latency savings to
+    first order: d=64 bf16 rows shrink 128 -> 68 bytes/(row, head)
+    (46.9%), f32 rows 256 -> 68 (73.4%)."""
+    full = kv_decode_traffic_bytes(pos, heads, d, itemsize)
+    quant = kv_decode_traffic_bytes(pos, heads, d, itemsize,
+                                    quant_kv="int8")
+    return {"full_bytes": full, "quant_bytes": quant,
+            "saved_frac": 1.0 - quant / full,
+            "row_bytes_full": d * itemsize, "row_bytes_quant": d + 4}
+
+
+def kv_capacity_model(pool_bytes: int, *, max_len: int, page_size: int,
+                      heads: int, d: int, itemsize: int, prompt_len: int,
+                      shared_prefix_len: int, gen: int,
+                      quant_kv: str = "off") -> dict:
+    """Concurrent-slot capacity of one layer's KV memory under three
+    layouts at EQUAL byte budget — the static model behind the paged
+    engine's >= 2x admission win on prefix-heavy traces.
+
+    * dense: every slot pins max_len rows whether used or not.
+    * paged: slots pin ceil((prompt+gen)/page_size) pages; the
+      shared-prefix pages are paid once pool-wide.
+    * paged + int8: same page count but each page is ~itemsize/1
+      smaller, so the same bytes buy proportionally more pages.
+    """
+    row_full = 2 * heads * d * itemsize          # K + V, one position
+    row = 2 * heads * (d + 4) if quant_kv == "int8" else row_full
+    dense_slots = pool_bytes // (max_len * row_full)
+    n_pages = pool_bytes // (page_size * row)
+    shared_pages = shared_prefix_len // page_size   # full pages only
+    per_req = -(-(prompt_len + gen) // page_size) - shared_pages
+    paged_slots = max(0, (n_pages - shared_pages) // max(per_req, 1))
+    return {"dense_slots": int(dense_slots),
+            "paged_slots": int(paged_slots),
+            "n_pages": int(n_pages),
+            "shared_pages": int(shared_pages),
+            "pages_per_request": int(per_req),
+            "capacity_ratio": paged_slots / max(dense_slots, 1)}
+
+
 @dataclasses.dataclass
 class RooflineReport:
     arch: str

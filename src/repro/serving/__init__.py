@@ -3,21 +3,30 @@
     engine.py     request lifecycle admit -> prefill -> decode -> evict
                   over a fixed pool of cache slots
     scheduler.py  slot allocation + FCFS admission
+    kv_pool.py    paged KV layout: page pool + per-slot page tables,
+                  content-hashed prefix sharing, copy-on-write
     sampler.py    greedy / temperature / top-k token selection
     request.py    dataclasses + per-request stats
-    workload.py   synthetic mixed-length arrival-trace generator
+    workload.py   synthetic arrival-trace generators (mixed-length +
+                  prefix-heavy chat)
 
-See docs/ARCHITECTURE.md §Serving engine for the layer map.
+See docs/ARCHITECTURE.md §Serving engine and §Paged KV cache for the
+layer maps.
 """
 
-from repro.serving.engine import DEFAULT_PREFILL_CHUNK, ServingEngine
+from repro.serving.engine import (DEFAULT_PAGE_SIZE, DEFAULT_PREFILL_CHUNK,
+                                  ServingEngine)
+from repro.serving.kv_pool import (AdmitPlan, KVPagePool, KVPoolExhausted,
+                                   PageWrite)
 from repro.serving.request import Request, percentile
 from repro.serving.sampler import Sampler, SamplerConfig, make_sampler
 from repro.serving.scheduler import SlotScheduler
-from repro.serving.workload import synthetic_trace
+from repro.serving.workload import prefix_heavy_trace, synthetic_trace
 
 __all__ = [
-    "DEFAULT_PREFILL_CHUNK", "ServingEngine", "Request", "percentile",
+    "AdmitPlan", "DEFAULT_PAGE_SIZE", "DEFAULT_PREFILL_CHUNK",
+    "KVPagePool", "KVPoolExhausted", "PageWrite", "ServingEngine",
+    "Request", "percentile",
     "Sampler", "SamplerConfig", "make_sampler", "SlotScheduler",
-    "synthetic_trace",
+    "prefix_heavy_trace", "synthetic_trace",
 ]

@@ -28,10 +28,25 @@ recurrent state rows (their "position" is implicit in the state, the
 pos vector only drives the attention members and bookkeeping). MoE is
 served but not token-exact vs. an isolated run by construction: expert
 capacity is contended by whichever tokens share the decode batch.
+
+Paged mode (policy.kv_layout="paged"): the per-slot cache rows are
+replaced by a fixed pool of KV pages plus a per-slot page table
+(models.init_paged_cache + serving.kv_pool). Admission still prefills
+into a dense batch-1 sub-cache, but the copy-out lands page by page
+through the `_write_page` chokepoint — and pages whose content-hash
+matches an already-resident prompt page are *shared* instead of
+written. Decode writes go through `pool.prepare_write` first, which
+turns a write into a shared page into a copy-on-write. Admission is
+additionally gated on the pool guaranteeing the request's full write
+range, so a decode step can never run out of pages mid-stream.
+policy.quant_kv="int8" stores pages as int8 + per-(position, head)
+scales, quantized at page write; the decode kernel dequantizes on its
+f32 accumulator.
 """
 
 from __future__ import annotations
 
+import math
 import time
 from typing import Any, Dict, List, Optional
 
@@ -40,18 +55,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policy as _pol
+from repro.core import precision as _prec
 from repro.models import model as M
+from repro.serving.kv_pool import KVPagePool, KVPoolExhausted
 from repro.serving.request import FINISHED, Request, percentile
 from repro.serving.sampler import Sampler
 from repro.serving.scheduler import SlotScheduler
 from repro.training import train_loop as TL
+
+#: Default tokens per KV page in paged mode. 16 rows keeps a page's K
+#: block a single sublane-aligned tile at head_dim 64-128 while keeping
+#: internal fragmentation (half a page per request on average) small.
+DEFAULT_PAGE_SIZE = 16
 
 # Admission prefill buckets prompt lengths down to a multiple of this
 # (remainder tokens run through one-token steps) to bound compile count.
 DEFAULT_PREFILL_CHUNK = 8
 
 
-def _slot_axis(big_shape, small_shape):
+def _slot_axis(big_shape, small_shape, name: str = "cache leaf"):
     """Axis along which a cache leaf indexes slots: the axis where the
     max_slots-sized cache differs from the 1-slot cache. None = the leaf
     has no slot axis distinguishable (max_slots == 1: replace whole)."""
@@ -59,7 +81,12 @@ def _slot_axis(big_shape, small_shape):
              if a != b]
     if not diffs:
         return None
-    assert len(diffs) == 1, (big_shape, small_shape)
+    if len(diffs) != 1:
+        raise ValueError(
+            f"cannot locate the slot axis of {name}: pooled shape "
+            f"{tuple(big_shape)} differs from the 1-slot shape "
+            f"{tuple(small_shape)} on axes {diffs}; per-slot admission "
+            f"copies need exactly one differing (slot) axis")
     return diffs[0]
 
 
@@ -67,13 +94,24 @@ class ServingEngine:
     def __init__(self, cfg, params, *, max_slots: int, max_len: int,
                  sampler: Optional[Sampler] = None,
                  prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
-                 eos_id: Optional[int] = None, policy=None):
+                 eos_id: Optional[int] = None, policy=None,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 kv_pool_pages: Optional[int] = None):
         self.cfg = cfg
         # Execution policy for every jitted step this engine compiles —
         # captured once at construction (explicit arg > ambient default)
         # so a later ambient change can never retrace a live engine
         # under different kernels.
         self.policy = _pol.resolve(policy)
+        paged = self.policy.kv_layout == "paged"
+        if paged and cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"kv_layout='paged' supports attention-cache families "
+                f"(dense/moe/vlm), not {cfg.family!r}")
+        if self.policy.quant_kv != "off" and not paged:
+            raise ValueError(
+                "quant_kv applies to KV pages; it requires "
+                "kv_layout='paged' (dense caches stay full precision)")
         # quant="int8" policies quantize the dense weights ONCE here —
         # every jitted step then streams int8 weight tiles (the 2-4x
         # weight-traffic cut is the whole point of serving quantized);
@@ -84,8 +122,14 @@ class ServingEngine:
         self.max_slots = max_slots
         # chunked_attention requires kv lengths beyond attn_chunk to be
         # chunk multiples; max_len is trace-dependent, so round it up.
+        # Paged mode additionally needs a whole number of pages so the
+        # admission page copies never straddle the sub-cache end.
         a = cfg.attn_chunk
-        if max_len > a and max_len % a:
+        if paged:
+            m = math.lcm(a, page_size) if max_len > a else page_size
+            if max_len % m:
+                max_len += m - max_len % m
+        elif max_len > a and max_len % a:
             max_len += a - max_len % a
         self.max_len = max_len
         self.prefill_chunk = max(1, prefill_chunk)
@@ -93,18 +137,38 @@ class ServingEngine:
         self.sampler = sampler or Sampler()
         self.scheduler = SlotScheduler(max_slots)
 
-        self.cache = M.init_cache(cfg, max_slots, max_len)
-        big_leaves, self._treedef = jax.tree.flatten(self.cache)
-        small = M.init_cache(cfg, 1, max_len)
-        self._slot_axes = [
-            _slot_axis(b.shape, s.shape)
-            for b, s in zip(big_leaves, jax.tree.leaves(small))]
+        self.page_size = page_size if paged else None
+        self.pool: Optional[KVPagePool] = None
+        if paged:
+            pages_per_slot = max_len // page_size
+            # Default pool = the dense layout's token capacity; prefix
+            # sharing and early-exit requests then turn unused rows into
+            # admission headroom instead of stranded slot tail.
+            n_pages = (max_slots * pages_per_slot if kv_pool_pages is None
+                       else kv_pool_pages)
+            self.pool = KVPagePool(n_pages, page_size, max_slots,
+                                   pages_per_slot)
+            self.cache = M.init_paged_cache(
+                cfg, n_pages, page_size, max_slots, pages_per_slot,
+                quant_kv=self.policy.quant_kv)
+            self._table_version = self.pool.version
+            self._write_pg = jax.jit(self._write_page, donate_argnums=(0,))
+            self._copy_pg = jax.jit(self._copy_page, donate_argnums=(0,))
+        else:
+            self.cache = M.init_cache(cfg, max_slots, max_len)
+            flat, self._treedef = jax.tree_util.tree_flatten_with_path(
+                self.cache)
+            small = M.init_cache(cfg, 1, max_len)
+            self._slot_axes = [
+                _slot_axis(b.shape, s.shape,
+                           name=jax.tree_util.keystr(path))
+                for (path, b), s in zip(flat, jax.tree.leaves(small))]
+            self._write = jax.jit(self._write_slot, donate_argnums=(0,))
 
         self._prefill = jax.jit(TL.make_prefill(cfg, policy=self.policy),
                                 donate_argnums=(2,))
         self._step = jax.jit(TL.make_serve_step(cfg, policy=self.policy),
                              donate_argnums=(3,))
-        self._write = jax.jit(self._write_slot, donate_argnums=(0,))
 
         # per-slot device-mirrored state (pos < 0 = inactive slot)
         self._tokens = np.zeros((max_slots, 1), np.int32)
@@ -120,6 +184,8 @@ class ServingEngine:
         self.decode_time = 0.0
         self.decode_slot_steps = 0     # sum of active slots over steps
         self.tokens_emitted = 0
+        self.peak_occupancy = 0
+        self._step_times: List[float] = []
 
     # -- cache slot copy ----------------------------------------------
     def _write_slot(self, cache, sub, slot):
@@ -136,6 +202,53 @@ class ServingEngine:
                 leaf, s.astype(leaf.dtype), tuple(start)))
         return jax.tree.unflatten(self._treedef, out)
 
+    # -- page pool copies (paged layout) -------------------------------
+    def _write_page(self, cache, sub, phys, start):
+        """Copy `page_size` prefilled rows starting at `start` out of the
+        dense batch-1 sub-cache into physical page `phys` of every
+        layer's pool — THE admission-copy chokepoint for the paged
+        layout (quantizing here when the policy asks for int8 pages)."""
+        ps = self.page_size
+        pages = dict(cache["pages"])
+        z = jnp.int32(0)         # uniform index dtype (x64-safe)
+        phys = jnp.int32(phys)
+        for name in ("k", "v"):
+            rows = jax.lax.dynamic_slice_in_dim(
+                sub[name][:, 0], start, ps, axis=1)      # (L, ps, Hkv, Dh)
+            if "ks" in pages:
+                q, s = _prec.quantize_kv(rows)           # s: (L, ps, Hkv)
+                pages[name] = jax.lax.dynamic_update_slice(
+                    pages[name], q[:, None], (z, phys, z, z, z))
+                pages[name + "s"] = jax.lax.dynamic_update_slice(
+                    pages[name + "s"], s.transpose(0, 2, 1)[:, None],
+                    (z, phys, z, z))
+            else:
+                pages[name] = jax.lax.dynamic_update_slice(
+                    pages[name], rows[:, None].astype(pages[name].dtype),
+                    (z, phys, z, z, z))
+        return {"pages": pages, "table": cache["table"]}
+
+    def _copy_page(self, cache, src, dst):
+        """Device copy page src -> dst in every layer's pool (CoW)."""
+        pages = {}
+        z = jnp.int32(0)         # uniform index dtype (x64-safe)
+        src, dst = jnp.int32(src), jnp.int32(dst)
+        for name, leaf in cache["pages"].items():
+            page = jax.lax.dynamic_slice(
+                leaf, (z, src) + (z,) * (leaf.ndim - 2),
+                (leaf.shape[0], 1) + leaf.shape[2:])
+            pages[name] = jax.lax.dynamic_update_slice(
+                leaf, page, (z, dst) + (z,) * (leaf.ndim - 2))
+        return {"pages": pages, "table": cache["table"]}
+
+    def _sync_table(self) -> None:
+        """Mirror the host page table to the device cache when the pool
+        has mutated it since the last jitted step."""
+        if self.pool.version != self._table_version:
+            self.cache = {"pages": self.cache["pages"],
+                          "table": jnp.asarray(self.pool.table)}
+            self._table_version = self.pool.version
+
     # -- submission ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, arrival_time: float = 0.0,
                enc_frames=None) -> Request:
@@ -146,6 +259,16 @@ class ServingEngine:
             (prompt.size, max_new_tokens, self.max_len)
         if self.cfg.family == "encdec" and enc_frames is None:
             raise ValueError("encdec requests need enc_frames")
+        if self.pool is not None:
+            # Infeasible-even-on-an-empty-pool requests are refused here,
+            # cleanly, before they can wedge the FCFS queue; transient
+            # fullness just defers admission (see step()).
+            need = -(-(prompt.size + max_new_tokens) // self.page_size)
+            if need > self.pool.n_pages:
+                raise KVPoolExhausted(
+                    f"request needs {need} KV pages (prompt {prompt.size} "
+                    f"+ gen {max_new_tokens} @ page_size {self.page_size}) "
+                    f"but the pool only has {self.pool.n_pages}")
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       arrival_time=arrival_time, enc_frames=enc_frames)
@@ -161,8 +284,26 @@ class ServingEngine:
         return time.perf_counter() - self._t0
 
     # -- admission (prefill path) ---------------------------------------
+    def _copy_prefill(self, slot: int, sub, plan=None) -> None:
+        """Admission-copy chokepoint for BOTH layouts. Dense copies the
+        whole slot row (`_write_slot`); paged copies each freshly
+        allocated prompt page through `_write_page` — pages the pool
+        matched to an already-resident prefix are shared, not
+        rewritten, which is where prefix admission gets cheap."""
+        if self.pool is None:
+            self.cache = self._write(self.cache, sub, slot)
+            return
+        for j, phys in plan.private:
+            self.cache = self._write_pg(
+                self.cache, sub, jnp.int32(phys),
+                jnp.int32(j * self.page_size))
+
     def _admit(self, req: Request) -> None:
         slot = self.scheduler.admit(req)
+        plan = None
+        if self.pool is not None:
+            plan = self.pool.admit_slot(slot, req.prompt,
+                                        req.max_new_tokens)
         req.t_admitted = self._now()
         t0 = time.perf_counter()
 
@@ -178,7 +319,7 @@ class ServingEngine:
             logits, sub = self._step(
                 self.params, jnp.asarray(req.prompt[None, None, i]),
                 jnp.int32(i), sub)
-        self.cache = self._write(self.cache, sub, slot)
+        self._copy_prefill(slot, sub, plan)
 
         row = np.asarray(logits)[0, -1, :self.cfg.vocab]
         tok = self.sampler(row)
@@ -200,6 +341,8 @@ class ServingEngine:
 
     def _finish(self, req: Request, slot: int, now: float) -> None:
         self.scheduler.release(slot)
+        if self.pool is not None:
+            self.pool.release_slot(slot)
         self._pos[slot] = -1
         self._tokens[slot, 0] = 0
         req.t_finished = now
@@ -208,14 +351,29 @@ class ServingEngine:
     def _decode_once(self) -> None:
         active = self.scheduler.active
         assert active
+        if self.pool is not None:
+            # Make every slot's write position privately owned BEFORE
+            # the jitted step scatters into it: a write into a shared
+            # page becomes a device page copy (CoW), a write past the
+            # mapped prefix allocates from the reservation made at
+            # admission (so this can never fail mid-stream).
+            for slot in active:
+                w = self.pool.prepare_write(slot, int(self._pos[slot]))
+                if w is not None and w.kind == "cow":
+                    self.cache = self._copy_pg(
+                        self.cache, jnp.int32(w.src), jnp.int32(w.dst))
+            self._sync_table()
         t0 = time.perf_counter()
         logits, self.cache = self._step(
             self.params, jnp.asarray(self._tokens),
             jnp.asarray(self._pos), self.cache)
         rows = np.asarray(logits)[:, -1, :self.cfg.vocab]   # sync point
-        self.decode_time += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.decode_time += dt
+        self._step_times.append(dt)
         self.decode_steps += 1
         self.decode_slot_steps += len(active)
+        self.peak_occupancy = max(self.peak_occupancy, len(active))
         now = self._now()
         for slot in sorted(active):
             req = active[slot]
@@ -236,6 +394,9 @@ class ServingEngine:
             req = self.scheduler.next_admission(self._now())
             if req is None:
                 break
+            if self.pool is not None and not self.pool.can_admit(
+                    req.prompt, req.max_new_tokens):
+                break   # head waits for pages to free (strict FCFS)
             self._admit(req)
         if self.scheduler.n_active:
             self._decode_once()
@@ -260,7 +421,9 @@ class ServingEngine:
         n_emitted = sum(r.n_generated for r in self.requests)
         assert n_emitted == self.tokens_emitted, \
             (n_emitted, self.tokens_emitted)
-        return {
+        waits = [r.t_admitted - r.arrival_time for r in self.requests
+                 if r.t_admitted is not None]
+        out = {
             "n_requests": len(self.requests),
             "n_finished": len(done),
             "prefill_tokens": self.prefill_tokens,
@@ -277,4 +440,12 @@ class ServingEngine:
             "latency_p95_s": percentile(lat, 95),
             "ttft_p50_s": percentile(ttft, 50),
             "ttft_p95_s": percentile(ttft, 95),
+            "peak_occupancy": self.peak_occupancy,
+            "decode_step_p50_s": percentile(self._step_times, 50),
+            "decode_step_p99_s": percentile(self._step_times, 99),
+            "admission_wait_p50_s": percentile(waits, 50),
+            "admission_wait_p99_s": percentile(waits, 99),
         }
+        if self.pool is not None:
+            out["kv_pool"] = self.pool.report()
+        return out

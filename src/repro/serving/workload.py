@@ -1,11 +1,17 @@
-"""Synthetic mixed-length workload generator.
+"""Synthetic workload generators.
 
-One trace builder shared by the serving CLI (launch/serve.py) and the
+Trace builders shared by the serving CLI (launch/serve.py) and the
 serving benchmark (benchmarks/bench_serving.py) so "the same trace
-parameters" always mean the same workload: prompt lengths uniform over
-an INCLUSIVE [lo, hi] range, arrivals Poisson at `arrival_rate` req/s
-(0 = burst, everything at t=0), random-token prompts, and — for encdec
-archs — a synthetic encoder-frame block per request.
+parameters" always mean the same workload:
+
+* synthetic_trace — mixed-length: prompt lengths uniform over an
+  INCLUSIVE [lo, hi] range, arrivals Poisson at `arrival_rate` req/s
+  (0 = burst, everything at t=0), random-token prompts, and — for
+  encdec archs — a synthetic encoder-frame block per request.
+* prefix_heavy_trace — chat-shaped: every request opens with the SAME
+  `prefix_len`-token system prompt followed by a short random suffix.
+  This is the workload where the paged KV cache's prefix sharing pays:
+  N requests pin one copy of the prefix pages instead of N.
 """
 
 from __future__ import annotations
@@ -29,6 +35,34 @@ def synthetic_trace(cfg, n: int, *, rng: np.random.Generator,
     trace: List[TraceItem] = []
     for i in range(n):
         prompt = rng.integers(0, cfg.vocab, int(lens[i])).astype(np.int32)
+        enc = None
+        if cfg.family == "encdec":
+            enc = rng.normal(size=(cfg.enc_ctx, cfg.d_model)) \
+                .astype(np.float32)
+        trace.append((prompt, gen, float(arrivals[i]), enc))
+    return trace
+
+
+def prefix_heavy_trace(cfg, n: int, *, rng: np.random.Generator,
+                       prefix_len: int = 32,
+                       suffix_range: Tuple[int, int] = (2, 12),
+                       gen: int = 8,
+                       arrival_rate: float = 0.0) -> List[TraceItem]:
+    """N requests sharing one `prefix_len`-token system prompt, each
+    with a uniform [lo, hi] random-token suffix (hi inclusive; lo may be
+    0 — identical prompts, the copy-on-write worst case). Arrival model
+    matches synthetic_trace."""
+    lo, hi = suffix_range
+    assert 0 <= lo <= hi, suffix_range
+    assert prefix_len >= 1, prefix_len
+    prefix = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
+    lens = rng.integers(lo, hi + 1, n)
+    arrivals = (np.cumsum(rng.exponential(1.0 / arrival_rate, n))
+                if arrival_rate > 0 else np.zeros(n))
+    trace: List[TraceItem] = []
+    for i in range(n):
+        suffix = rng.integers(0, cfg.vocab, int(lens[i])).astype(np.int32)
+        prompt = np.concatenate([prefix, suffix])
         enc = None
         if cfg.family == "encdec":
             enc = rng.normal(size=(cfg.enc_ctx, cfg.d_model)) \

@@ -345,6 +345,75 @@ def tune_flash_decode(
         cache, save, pol.kernel_fingerprint)
 
 
+def tune_flash_decode_paged(
+    page_size: int,
+    d: int,
+    dtype="float32",
+    *,
+    batch: int = 4,
+    heads: int = 1,
+    pages_per_slot: int = 4,
+    pos: int | None = None,
+    window: int | None = None,
+    policy: Policy | None = None,
+    backend: str | None = None,         # deprecated string shim
+    cache: TuningCache | None = None,
+    chip: hw.ChipSpec | None = None,
+    warmup: int = 1,
+    iters: int = 3,
+    max_candidates: int | None = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """Sweep sub-page K/V tiles for the paged decode kernel and persist
+    the winner under flash_decode_paged_key — keyed by (page_size,
+    head_dim), the only dims the tile space depends on (bk must divide
+    the page; pool size and slot count just scale the grid).
+
+    The synthetic pool maps slot b's pages identity-style (page b*pp+j)
+    at full depth, the steady-state worst case. policy.quant_kv="int8"
+    times the dequantizing variant: the int8 pool + scale planes are
+    what streams, and the winner lands under the _kvint8-suffixed
+    fingerprint so full-width winners are never served to it."""
+    pol = _exec_policy(policy, backend)
+    if chip is not None:        # explicit kwarg overrides the policy's chip
+        pol = pol.replace(chip=chip)
+    chip = pol.chip
+    cache = get_cache() if cache is None else cache
+    interpret = pol.resolved_interpret
+    rng = np.random.default_rng(seed)
+    pp = pages_per_slot
+    n_pages = batch * pp
+    depth = pp * page_size
+    q = jnp.asarray(rng.normal(size=(batch, 1, heads, d)), dtype)
+    kp = jnp.asarray(rng.normal(size=(n_pages, page_size, heads, d)), dtype)
+    vp = jnp.asarray(rng.normal(size=(n_pages, page_size, heads, d)), dtype)
+    table = jnp.arange(n_pages, dtype=jnp.int32).reshape(batch, pp)
+    pos_v = jnp.full((batch,), depth - 1 if pos is None else pos, jnp.int32)
+    ks = vs = None
+    if pol.quant_kv == "int8":
+        kp, ks = _prec.quantize_kv(kp)
+        vp, vs = _prec.quantize_kv(vp)
+        ks = ks.transpose(0, 2, 1)          # (P, Hkv, page_size)
+        vs = vs.transpose(0, 2, 1)
+    itemsize = 1 if pol.quant_kv == "int8" else jnp.dtype(dtype).itemsize
+
+    return _sweep(
+        "flash_decode_paged",
+        f"flash_decode_paged p{page_size}xd{d} {np.dtype(dtype).name}",
+        _space.flash_decode_paged_candidates(
+            page_size, d, itemsize, chip=chip,
+            max_candidates=max_candidates),
+        lambda cfg: _timer(
+            lambda x, kk, vv, t, p, c=cfg: _ops.flash_decode_paged(
+                x, kk, vv, t, pos=p, window=window, ks=ks, vs=vs,
+                policy=pol, block=c),
+            (q, kp, vp, table, pos_v), interpret, warmup, iters),
+        lambda cfg, meta: cache.put_flash_decode_paged(
+            page_size, d, dtype, pol, cfg, **meta),
+        cache, save, pol.kernel_fingerprint)
+
+
 def tune_flash_bwd(
     tq: int,
     tk: int,

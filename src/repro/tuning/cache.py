@@ -112,6 +112,16 @@ def flash_decode_key(tk: int, d: int, dtype, backend) -> str:
             f"{_backend_tag(backend)}")
 
 
+def flash_decode_paged_key(page_size: int, d: int, dtype, backend) -> str:
+    """The paged decode kernel's tile space is keyed by (page_size,
+    head_dim), not cache depth: bk must divide the page (one pool page
+    — or a sub-tile of it — per grid step), so the same winner serves
+    every pool size and slot count. The op prefix keeps these entries
+    disjoint from dense flash_decode winners."""
+    return (f"flash_decode_paged|p{page_size}xd{d}|{np.dtype(dtype).name}|"
+            f"{_backend_tag(backend)}")
+
+
 def flash_bwd_key(tq: int, tk: int, d: int, dtype, backend) -> str:
     """Backward winners get their own population: the two-sweep bwd
     kernel's working set (dK/dV accumulators + q/do/lse/delta streams)
@@ -262,6 +272,19 @@ class TuningCache:
     def put_flash_decode(self, tk: int, d: int, dtype, backend,
                          cfg: FlashBlockConfig, **meta: Any) -> str:
         key = flash_decode_key(tk, d, dtype, backend)
+        self.put(key, {"bk": cfg.bk, "tuned_at": _now(), **meta})
+        return key
+
+    def get_flash_decode_paged(self, page_size: int, d: int, dtype,
+                               backend) -> Optional[FlashBlockConfig]:
+        e = self.get(flash_decode_paged_key(page_size, d, dtype, backend))
+        if e is None:
+            return None
+        return FlashBlockConfig(bq=1, bk=int(e["bk"]))
+
+    def put_flash_decode_paged(self, page_size: int, d: int, dtype, backend,
+                               cfg: FlashBlockConfig, **meta: Any) -> str:
+        key = flash_decode_paged_key(page_size, d, dtype, backend)
         self.put(key, {"bk": cfg.bk, "tuned_at": _now(), **meta})
         return key
 

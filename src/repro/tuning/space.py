@@ -156,6 +156,38 @@ def flash_decode_candidates(
     return out
 
 
+def flash_decode_paged_candidates(
+    page_size: int,
+    d: int,
+    itemsize: int,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+    max_candidates: int | None = None,
+) -> list[FlashBlockConfig]:
+    """Feasible K/V tiles for the PAGED decode kernel, keyed by
+    (page_size, head_dim): the grid streams one pool page per step, so
+    bk must divide the page — the space is the divisor lattice of
+    page_size, not of the cache depth. The whole-page default comes
+    first (fewest grid steps per page); smaller sub-tiles trade grid
+    overhead for a finer prefix skip on the slot's final page."""
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    default = FlashBlockConfig(1, page_size)
+    out = [default]
+    seen = {page_size}
+    for bk in sorted({min(b, page_size) for b in (16, 32, 64) + _FBK},
+                     reverse=True):
+        if page_size % bk or bk in seen:
+            continue
+        cfg = FlashBlockConfig(1, bk)
+        if cfg.vmem_bytes(d, itemsize) > budget:
+            continue
+        seen.add(bk)
+        out.append(cfg)
+    if max_candidates is not None:
+        out = out[:max(1, max_candidates)]
+    return out
+
+
 def flash_bwd_candidates(
     tq: int,
     tk: int,

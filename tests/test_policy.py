@@ -330,3 +330,21 @@ def test_unknown_autotune_mode_rejected():
 def test_unknown_policy_field_rejected():
     with pytest.raises(ValueError, match="unknown policy field"):
         Policy.parse("backend=pallas,turbo=on")
+
+
+def test_kv_fields_fingerprint_and_validation():
+    # defaults must leave both fingerprints byte-identical to the
+    # pre-paged era: old tuning.json keys and BENCH rows stay valid
+    assert Policy().kernel_fingerprint == "xla"
+    assert Policy(backend="pallas").kernel_fingerprint in \
+        ("pallas", "pallas_interpret")      # interpret resolves per host
+    assert "kv" not in Policy().fingerprint()
+    assert "paged" not in Policy().fingerprint()
+    p = Policy(kv_layout="paged", quant_kv="int8")
+    assert Policy.parse(p.fingerprint()) == p
+    kf = p.kernel_fingerprint
+    assert kf.endswith("_kvint8_paged"), kf
+    with pytest.raises(ValueError):
+        Policy(kv_layout="rows")
+    with pytest.raises(ValueError):
+        Policy(quant_kv="fp8")

@@ -221,6 +221,45 @@ def test_flash_decode_backends_match_reference(tk, d, group, window, dtype,
         _assert_backend_close(backend, out, ref, dtype)
 
 
+@given(ps=st.sampled_from([8, 16]), pp=st.sampled_from([2, 4]),
+       d=_ATTN_D, group=_ATTN_GROUP, window=_ATTN_WINDOW,
+       quant=st.booleans(), seed=st.integers(0, 2**31))
+@settings(max_examples=5, deadline=None)
+def test_flash_decode_paged_backends_match_reference(ps, pp, d, group,
+                                                     window, quant, seed):
+    """Paged decode conformance: every registered backend must match the
+    gather+softmax oracle on a scattered page table with shared pages,
+    an unmapped (-1) tail, ragged per-slot depths and — when quant is
+    set — int8 pools with per-(position, head) f32 scale planes."""
+    rng = np.random.default_rng(seed)
+    B, hkv = 2, 2
+    h = hkv * group
+    n_pages = B * pp + 1                     # one page never mapped
+    q = jnp.asarray(rng.normal(size=(B, 1, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pages, ps, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, ps, hkv, d)), jnp.float32)
+    table = jnp.asarray(rng.permutation(n_pages)[:B * pp].reshape(B, pp),
+                        jnp.int32)
+    table = table.at[1, -1].set(-1)          # slot 1: last page unmapped
+    pos = jnp.asarray([ps * pp - 1,
+                       int(rng.integers(0, ps * (pp - 1)))], jnp.int32)
+    ks = vs = None
+    if quant:
+        kp, ks = precision.quantize_kv(kp)
+        vp, vs = precision.quantize_kv(vp)
+        ks = ks.transpose(0, 2, 1)           # (P, ps, hkv) -> (P, hkv, ps)
+        vs = vs.transpose(0, 2, 1)
+    ref = kref.flash_decode_paged_ref(q, kp, vp, table, pos=pos,
+                                      window=window, ks=ks, vs=vs)
+    ref = ref.astype(jnp.float32)
+    for backend in registry.registered_backends("flash_decode_paged"):
+        out = ops.flash_decode_paged(
+            q, kp, vp, table, pos=pos, window=window, ks=ks, vs=vs,
+            policy=Policy(backend=backend, interpret=True))
+        assert out.dtype == q.dtype, backend
+        _assert_backend_close(backend, out, ref, "float32")
+
+
 @given(tq=_ATTN_SEQ, tk=_ATTN_SEQ, d=_ATTN_D, group=_ATTN_GROUP,
        causal=st.booleans(), window=_ATTN_WINDOW,
        dtype=st.sampled_from(["float32", "bfloat16"]),

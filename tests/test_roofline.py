@@ -105,3 +105,35 @@ def test_report_bounds_and_terms():
     assert rep.bound in ("compute", "memory", "collective")
     assert rep.t_compute > 0 and rep.t_memory > 0
     assert rep.t_collective == 0.0              # no collectives on 1 dev
+
+
+def test_kv_traffic_and_quant_savings_thresholds():
+    from repro.roofline.analysis import kv_decode_traffic_bytes, \
+        kv_quant_savings
+    # exact bookkeeping: (pos + 1) rows per side, heads * d elements
+    assert kv_decode_traffic_bytes(15, 4, 64, 2) == 2 * 16 * 4 * 64 * 2
+    assert kv_decode_traffic_bytes(15, 4, 64, 2, quant_kv="int8") == \
+        2 * 16 * 4 * (64 + 4)
+    # acceptance bar: int8 KV pages cut decode KV traffic by >= 40%
+    for d in (64, 128):
+        for itemsize in (2, 4):
+            s = kv_quant_savings(255, 8, d, itemsize)
+            assert s["saved_frac"] >= 0.40, (d, itemsize, s)
+    # wider rows amortize the per-row scale better
+    assert kv_quant_savings(255, 8, 128, 2)["saved_frac"] > \
+        kv_quant_savings(255, 8, 64, 2)["saved_frac"]
+
+
+def test_kv_capacity_model_prefix_heavy_2x():
+    from repro.roofline.analysis import kv_capacity_model
+    kw = dict(max_len=64, page_size=16, heads=4, d=64, itemsize=4,
+              prompt_len=40, shared_prefix_len=32, gen=8)
+    pool = 2 * 64 * (2 * 4 * 64 * 4)        # exactly 2 dense slots' bytes
+    f32 = kv_capacity_model(pool, **kw)
+    q8 = kv_capacity_model(pool, quant_kv="int8", **kw)
+    assert f32["dense_slots"] == 2
+    # acceptance bar: >= 2x concurrent slots on the prefix-heavy trace
+    assert f32["capacity_ratio"] >= 2.0
+    assert q8["capacity_ratio"] >= 2.0
+    assert q8["paged_slots"] > f32["paged_slots"]   # int8 pages stack up
+    assert q8["n_pages"] > f32["n_pages"]

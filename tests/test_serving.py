@@ -239,6 +239,186 @@ def test_samplers():
         SamplerConfig(kind="temperature", temperature=0.0)
 
 
+# ------------------------------------------------------- paged KV cache
+
+
+def test_kv_pool_prefix_sharing_refcounts_and_release():
+    from repro.serving import KVPagePool
+    pool = KVPagePool(n_pages=16, page_size=4, max_slots=4,
+                      pages_per_slot=4)
+    prompt = np.arange(12, dtype=np.int32)          # 3 full pages
+    p0 = pool.admit_slot(0, prompt, 4)
+    assert len(p0.private) == 3 and not p0.shared
+    p1 = pool.admit_slot(1, prompt, 4)
+    assert len(p1.shared) == 3 and not p1.private   # whole prompt shared
+    for _, phys in p1.shared:
+        assert pool.refcount[phys] == 2
+    assert pool.sharing_ratio() == 2.0
+    pool.release_slot(0)
+    for _, phys in p1.shared:
+        assert pool.refcount[phys] == 1             # survivor keeps pages
+    pool.release_slot(1)
+    assert (pool.refcount == 0).all()
+    assert pool.n_free == pool.n_pages and pool.n_reserved == 0
+    assert (pool.table == -1).all()
+    assert not pool._by_hash and not pool._hash_of  # registry drained
+
+
+def test_kv_pool_copy_on_write_preserves_sharer():
+    from repro.serving import KVPagePool
+    pool = KVPagePool(n_pages=16, page_size=4, max_slots=4,
+                      pages_per_slot=4)
+    prompt = np.arange(10, dtype=np.int32)          # 2 full + partial tail
+    pool.admit_slot(0, prompt, 4)
+    plan = pool.admit_slot(1, prompt, 4)
+    tail = dict(plan.shared)[2]                     # shared partial page
+    assert pool.refcount[tail] == 2
+    # first generated token (pos 10) lands in the shared tail page -> CoW
+    w = pool.prepare_write(1, 10)
+    assert w is not None and w.kind == "cow"
+    assert w.src == tail and w.dst != tail
+    assert pool.table[1, 2] == w.dst                # writer retargeted
+    assert pool.table[0, 2] == tail                 # sharer untouched
+    assert pool.refcount[tail] == 1
+    assert pool.stats.cow_copies == 1
+    # subsequent writes into now-private pages need no directive
+    assert pool.prepare_write(1, 11) is None
+    assert pool.prepare_write(0, 10) is None
+    # a write past the mapped range allocates a fresh page
+    w2 = pool.prepare_write(1, 12)
+    assert w2.kind == "alloc" and pool.table[1, 3] == w2.dst
+
+
+def test_kv_pool_exhaustion_refuses_cleanly():
+    from repro.serving import KVPagePool, KVPoolExhausted
+    pool = KVPagePool(n_pages=2, page_size=4, max_slots=2,
+                      pages_per_slot=4)
+    pool.admit_slot(0, np.arange(4, dtype=np.int32), 4)  # 1 page + 1 rsvd
+    assert not pool.can_admit(np.arange(8, dtype=np.int32), 4)
+    with pytest.raises(KVPoolExhausted):
+        pool.admit_slot(1, np.arange(8, dtype=np.int32), 4)
+    assert pool.stats.refused == 1
+    # refusal leaves state intact: slot 0's reservation still honored
+    assert pool.prepare_write(0, 4).kind == "alloc"
+    pool.release_slot(0)
+    assert pool.n_free == pool.n_pages
+
+
+def test_engine_cow_copies_bytes_and_leaves_shared_page_intact():
+    """Two identical prompts share a partial tail page; the first decode
+    step CoWs it for one writer. The copy must carry the prefix rows and
+    the original page must keep serving the other slot byte-for-byte."""
+    from repro.core.policy import Policy
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pol = Policy(kv_layout="paged")
+    eng = ServingEngine(cfg, params, max_slots=2, max_len=32, policy=pol,
+                        page_size=8)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, (10,)).astype(np.int32)
+    r0 = eng.submit(prompt.copy(), 4)
+    r1 = eng.submit(prompt.copy(), 4)
+    eng.step()          # admits both (tail page shared), decodes pos 10
+    assert eng.pool.stats.cow_copies == 1
+    pa, pb = int(eng.pool.table[0, 1]), int(eng.pool.table[1, 1])
+    assert pa != pb     # tail page diverged
+    # prefix rows (pos 8, 9) identical across original and CoW copy, in
+    # every layer of both pools
+    for name in ("k", "v"):
+        pages = np.asarray(eng.cache["pages"][name])
+        np.testing.assert_array_equal(pages[:, pa, :2], pages[:, pb, :2])
+    eng.run()
+    want = _reference_generate(cfg, params, prompt, 4)
+    assert r0.generated == want and r1.generated == want
+
+
+def test_engine_paged_pool_deferral_and_submit_refusal():
+    from repro.core.policy import Policy
+    from repro.serving import KVPoolExhausted
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pol = Policy(kv_layout="paged")
+    eng = ServingEngine(cfg, params, max_slots=3, max_len=64, policy=pol,
+                        page_size=8, kv_pool_pages=6)
+    # a request that fits max_len but can never fit the 6-page pool is
+    # refused at submit, not queued
+    with pytest.raises(KVPoolExhausted):
+        eng.submit(np.arange(50, dtype=np.int32) % cfg.vocab, 10)
+    # three requests whose pages exceed the pool: the third waits for a
+    # release even though a scheduler slot is free the whole time
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (24,)).astype(np.int32)
+               for _ in range(3)]
+    reqs = [eng.submit(p, 6) for p in prompts]
+    report = eng.run()
+    assert report["n_finished"] == 3
+    admitted = sorted(r.t_admitted for r in reqs)
+    finished = sorted(r.t_finished for r in reqs)
+    assert admitted[-1] > finished[0], "expected a pool-deferred admission"
+    for req, prompt in zip(reqs, prompts):
+        assert req.generated == _reference_generate(cfg, params, prompt, 6)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "qwen2-vl-2b"])
+def test_engine_paged_int8_token_exact_pallas(arch):
+    """Paged + int8-KV serving under the pallas policy must route every
+    decode step through the paged flash kernel (spied) and emit exactly
+    the tokens of the dense full-precision whole-prompt reference."""
+    from repro.core.policy import Policy
+    from repro.kernels import flash_attention as fa
+
+    cfg = get_config(arch, reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pol = Policy(backend="pallas", interpret=True,
+                 kv_layout="paged", quant_kv="int8")
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in CASES[arch]]
+
+    calls = []
+    orig = fa.flash_decode_paged
+
+    def spy(*a, **kw):
+        calls.append(a[0].shape)
+        return orig(*a, **kw)
+
+    fa.flash_decode_paged = spy
+    try:
+        eng = ServingEngine(cfg, params, max_slots=2, max_len=64,
+                            policy=pol, page_size=8)
+        reqs = [eng.submit(p, g) for p, g in zip(prompts, GENS)]
+        report = eng.run()
+    finally:
+        fa.flash_decode_paged = orig
+
+    assert report["n_finished"] == len(reqs)
+    assert calls, "paged decode never reached the paged flash kernel"
+    # kernel-level q is (batch, heads, head_dim): q_len already squeezed
+    assert all(len(shape) == 3 for shape in calls)
+    assert report["kv_pool"]["cow_copies"] >= 0    # pool report wired up
+
+    ref_pol = Policy(backend="pallas", interpret=True)   # dense f32 KV
+    with ref_pol.scope():
+        for req, prompt, g in zip(reqs, prompts, GENS):
+            want = _reference_generate(cfg, params, prompt, g)
+            assert req.generated == want, (arch, req.rid, req.generated,
+                                           want)
+
+
+def test_engine_paged_rejects_unsupported_combinations():
+    from repro.core.policy import Policy
+    cfg = get_config("mamba2-2.7b", reduced=True)    # ssm: no KV pages
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, max_slots=2, max_len=32,
+                      policy=Policy(kv_layout="paged"))
+    cfg2 = get_config("qwen3-0.6b", reduced=True)
+    params2 = M.init_params(cfg2, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):                  # int8 KV needs pages
+        ServingEngine(cfg2, params2, max_slots=2, max_len=32,
+                      policy=Policy(quant_kv="int8"))
+
+
 def test_serve_cli_mixed_trace_smoke():
     from repro.launch.serve import main as serve_main
     report = serve_main(["--reduced", "--requests", "5", "--max-slots", "2",

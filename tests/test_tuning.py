@@ -206,3 +206,23 @@ def test_tune_flash_bwd_populates_cache(tmp_cache):
     served = tcache.TuningCache(tmp_cache).load().get_flash_bwd(
         256, 256, 32, "float32", pol_fp)
     assert served == res.best
+
+
+def test_flash_decode_paged_candidates_divide_page():
+    cands = space.flash_decode_paged_candidates(16, 64, itemsize=4)
+    assert cands and all(c.bq == 1 and 16 % c.bk == 0 and c.bk <= 16
+                         for c in cands)
+    assert cands[0].bk == 16            # whole-page default first
+    assert len({c.bk for c in cands}) == len(cands)
+
+
+def test_tune_flash_decode_paged_populates_cache(tmp_cache):
+    pol_fp = "pallas_interpret"
+    res = autotuner.tune_flash_decode_paged(16, 32, "float32",
+                                            backend=pol_fp, batch=2,
+                                            pages_per_slot=2, warmup=0,
+                                            iters=1, max_candidates=2)
+    assert res.best_s > 0 and res.best.bq == 1
+    served = tcache.TuningCache(tmp_cache).load().get_flash_decode_paged(
+        16, 32, "float32", pol_fp)
+    assert served == res.best
