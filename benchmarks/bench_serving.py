@@ -1,15 +1,18 @@
 """Continuous-batching serving benchmark: prefill/decode throughput and
 per-request latency percentiles under a mixed-length arrival trace.
 
-Two traces per arch on the reduced config (CPU smoke numbers; the
+Three traces per arch on the reduced config (CPU smoke numbers; the
 engine itself is what a TPU deployment would run):
 
   * burst  — all requests at t=0, queueing on the slot pool: measures
     steady-state decode tok/s and slot occupancy;
   * poisson — arrivals at a finite rate: measures the latency
-    distribution (p50/p95) a request actually sees.
+    distribution (p50/p95) a request actually sees;
+  * bursty — grouped arrivals (burst_size > 1) with per-request
+    deadlines: measures goodput and the deadline-miss rate under the
+    pool-exhaustion worst case a smooth trace never produces.
 
-A third section pits the paged KV cache against dense rows at EQUAL
+A fourth section pits the paged KV cache against dense rows at EQUAL
 KV byte budget on a prefix-heavy chat trace: the dense engine can only
 afford a couple of max_len slots, while page granularity + shared
 prefix pages + int8 pages buy strictly more concurrent occupancy from
@@ -44,6 +47,11 @@ MAX_SLOTS = 4
 GEN = 8
 LEN_RANGE = (8, 48)           # inclusive, as in launch/serve.py
 
+# bursty + deadline scenario (fault-tolerance accounting surface)
+BURSTY_RATE = 16.0
+BURSTY_SIZE = 4
+BURSTY_DEADLINE = 30.0        # generous on CPU; misses only under chaos
+
 # prefix-heavy capacity shoot-out (equal KV bytes across layouts)
 CAP_ARCH = "qwen3-0.6b"
 CAP_REQUESTS = 8
@@ -54,7 +62,14 @@ CAP_PAGE = 16
 CAP_DENSE_SLOTS = 2           # what the byte budget buys at max_len rows
 
 
+def _submit_all(eng, trace):
+    return [eng.submit(it.prompt, it.gen, arrival_time=it.arrival,
+                       deadline=it.deadline, priority=it.priority,
+                       enc_frames=it.enc_frames) for it in trace]
+
+
 def _derived(rep, reqs) -> str:
+    miss = rep["deadline_miss_rate"]
     return (f"prefill_tok_s={rep['prefill_tok_s']:.0f};"
             f"decode_tok_s={rep['decode_tok_s']:.0f};"
             f"occupancy={rep['mean_occupancy']:.2f};"
@@ -64,24 +79,35 @@ def _derived(rep, reqs) -> str:
             f"decode_step_p50_ms={rep['decode_step_p50_s']*1e3:.2f};"
             f"decode_step_p99_ms={rep['decode_step_p99_s']*1e3:.2f};"
             f"adm_wait_p50_ms={rep['admission_wait_p50_s']*1e3:.0f};"
-            f"adm_wait_p99_ms={rep['admission_wait_p99_s']*1e3:.0f}")
+            f"adm_wait_p99_ms={rep['admission_wait_p99_s']*1e3:.0f};"
+            f"goodput={rep['goodput']:.2f};"
+            f"expired={rep['expired']};cancelled={rep['cancelled']};"
+            f"preempted={rep['preempted']};"
+            f"quarantined={rep['quarantined']};"
+            f"deadline_miss={'nan' if miss != miss else f'{miss:.2f}'}")
 
 
 def run() -> None:
     for name in ARCHS:
         cfg = C.get_config(name, reduced=True)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
-        for label, rate in (("burst", 0.0), ("poisson", 8.0)):
+        scenarios = (
+            ("burst", dict(arrival_rate=0.0)),
+            ("poisson", dict(arrival_rate=8.0)),
+            ("bursty_deadline", dict(arrival_rate=BURSTY_RATE,
+                                     burst_size=BURSTY_SIZE,
+                                     deadline=BURSTY_DEADLINE)),
+        )
+        for label, kw in scenarios:
             rng = np.random.default_rng(0)
             eng = ServingEngine(cfg, params, max_slots=MAX_SLOTS,
                                 max_len=LEN_RANGE[1] + GEN)
             trace = synthetic_trace(cfg, N_REQUESTS, rng=rng,
-                                    len_range=LEN_RANGE, gen=GEN,
-                                    arrival_rate=rate)
-            reqs = [eng.submit(p, g, arrival_time=t, enc_frames=e)
-                    for p, g, t, e in trace]
+                                    len_range=LEN_RANGE, gen=GEN, **kw)
+            reqs = _submit_all(eng, trace)
             rep = eng.run()
-            mean_lat = float(np.mean([r.latency for r in reqs]))
+            mean_lat = float(np.mean([r.latency for r in reqs
+                                      if r.latency is not None]))
             emit(f"serving_{name}_{label}_r{N_REQUESTS}s{MAX_SLOTS}",
                  mean_lat, _derived(rep, reqs))
     run_paged_capacity()
@@ -122,8 +148,7 @@ def run_paged_capacity() -> None:
         trace = prefix_heavy_trace(cfg, CAP_REQUESTS, rng=rng,
                                    prefix_len=CAP_PREFIX,
                                    suffix_range=CAP_SUFFIX, gen=CAP_GEN)
-        reqs = [eng.submit(p, g, arrival_time=t, enc_frames=e)
-                for p, g, t, e in trace]
+        reqs = _submit_all(eng, trace)
         rep = eng.run()
         mean_lat = float(np.mean([r.latency for r in reqs]))
         peaks[label] = rep["peak_occupancy"]

@@ -66,6 +66,9 @@ _EXPORTS = {
     "make_sampler": ("repro.serving", "make_sampler"),
     "synthetic_trace": ("repro.serving", "synthetic_trace"),
     "prefix_heavy_trace": ("repro.serving", "prefix_heavy_trace"),
+    # fault tolerance (serving.faults)
+    "FaultInjector": ("repro.serving", "FaultInjector"),
+    "SimulatedKernelFault": ("repro.serving", "SimulatedKernelFault"),
     # tuning
     "TuningCache": ("repro.tuning", "TuningCache"),
     "tune_matmul": ("repro.tuning", "tune_matmul"),

@@ -1,32 +1,42 @@
 """Continuous-batching serving subsystem.
 
     engine.py     request lifecycle admit -> prefill -> decode -> evict
-                  over a fixed pool of cache slots
-    scheduler.py  slot allocation + FCFS admission
+                  over a fixed pool of cache slots, with deadline /
+                  cancel / preempt / quarantine fault handling
+    scheduler.py  slot allocation + FCFS admission over eligible
+                  waiters (arrival + preemption-resume backoff),
+                  deadline expiry, preemption requeue
     kv_pool.py    paged KV layout: page pool + per-slot page tables,
                   content-hashed prefix sharing, copy-on-write
     sampler.py    greedy / temperature / top-k token selection
     request.py    dataclasses + per-request stats
     workload.py   synthetic arrival-trace generators (mixed-length +
-                  prefix-heavy chat)
+                  prefix-heavy chat; optional deadlines, priorities,
+                  bursty arrivals)
+    faults.py     deterministic chaos injector (NaN rows, page
+                  corruption, kernel faults, slow steps, forced pool
+                  exhaustion) scripted by step counts
 
-See docs/ARCHITECTURE.md §Serving engine and §Paged KV cache for the
-layer maps.
+See docs/ARCHITECTURE.md §Serving engine, §Paged KV cache and §Fault
+tolerance for the layer maps.
 """
 
 from repro.serving.engine import (DEFAULT_PAGE_SIZE, DEFAULT_PREFILL_CHUNK,
                                   ServingEngine)
+from repro.serving.faults import FaultInjector, SimulatedKernelFault
 from repro.serving.kv_pool import (AdmitPlan, KVPagePool, KVPoolExhausted,
                                    PageWrite)
 from repro.serving.request import Request, percentile
 from repro.serving.sampler import Sampler, SamplerConfig, make_sampler
 from repro.serving.scheduler import SlotScheduler
-from repro.serving.workload import prefix_heavy_trace, synthetic_trace
+from repro.serving.workload import (TraceItem, prefix_heavy_trace,
+                                    synthetic_trace)
 
 __all__ = [
     "AdmitPlan", "DEFAULT_PAGE_SIZE", "DEFAULT_PREFILL_CHUNK",
-    "KVPagePool", "KVPoolExhausted", "PageWrite", "ServingEngine",
+    "FaultInjector", "KVPagePool", "KVPoolExhausted", "PageWrite",
+    "ServingEngine", "SimulatedKernelFault",
     "Request", "percentile",
     "Sampler", "SamplerConfig", "make_sampler", "SlotScheduler",
-    "prefix_heavy_trace", "synthetic_trace",
+    "TraceItem", "prefix_heavy_trace", "synthetic_trace",
 ]

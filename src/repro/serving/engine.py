@@ -42,12 +42,40 @@ range, so a decode step can never run out of pages mid-stream.
 policy.quant_kv="int8" stores pages as int8 + per-(position, head)
 scales, quantized at page write; the decode kernel dequantizes on its
 f32 accumulator.
+
+Fault tolerance (docs/ARCHITECTURE.md §Fault tolerance):
+
+  * Deadlines + cancellation — waiters whose `deadline` passed are
+    dropped (EXPIRED) before they ever burn a slot; `cancel(rid)`
+    releases a waiting or mid-decode request immediately, refcount-safe
+    against prefix-shared and mid-CoW KV pages.
+  * Preemption — when the FCFS head cannot be admitted because the page
+    pool is exhausted, the lowest-priority / youngest active slot is
+    preempted instead of stalling the head: its private pages return to
+    the pool (shared prefix pages survive via refcounts), the victim is
+    requeued and later *resumed* by re-prefilling prompt + generated so
+    far (token-identical continuation under greedy sampling). A
+    per-request retry budget plus exponential resume backoff bound the
+    churn.
+  * Numeric guards — after every decode step a sentinel scans each
+    active row's logits; a non-finite row quarantines ONLY that slot
+    (terminal QUARANTINED status + diagnostic) while the rest of the
+    batch keeps decoding. Repeated kernel-level faults (RuntimeError
+    out of the jitted step) degrade the engine's policy to the `xla`
+    registry backend with a once-per-process warning instead of
+    crashing. (Step retry after a fault assumes the donated cache
+    buffer survives — true on CPU/interpret where donation is a no-op;
+    a real-device deployment would pair this with cache snapshots.)
+  * Chaos harness — a `serving.faults.FaultInjector` drives all of the
+    above at scripted step counts for deterministic tests and the
+    `--chaos-*` serve CLI flags.
 """
 
 from __future__ import annotations
 
 import math
 import time
+import warnings
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -56,9 +84,12 @@ import numpy as np
 
 from repro.core import policy as _pol
 from repro.core import precision as _prec
+from repro.distributed.fault_tolerance import StragglerDetector
 from repro.models import model as M
+from repro.serving.faults import FaultInjector
 from repro.serving.kv_pool import KVPagePool, KVPoolExhausted
-from repro.serving.request import FINISHED, Request, percentile
+from repro.serving.request import (ACTIVE, CANCELLED, FINISHED, QUARANTINED,
+                                   TERMINAL, WAITING, Request, percentile)
 from repro.serving.sampler import Sampler
 from repro.serving.scheduler import SlotScheduler
 from repro.training import train_loop as TL
@@ -71,6 +102,9 @@ DEFAULT_PAGE_SIZE = 16
 # Admission prefill buckets prompt lengths down to a multiple of this
 # (remainder tokens run through one-token steps) to bound compile count.
 DEFAULT_PREFILL_CHUNK = 8
+
+# Degrading a faulting kernel backend to xla warns once per process.
+_DEGRADE_WARNED = False
 
 
 def _slot_axis(big_shape, small_shape, name: str = "cache leaf"):
@@ -96,12 +130,19 @@ class ServingEngine:
                  prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
                  eos_id: Optional[int] = None, policy=None,
                  page_size: int = DEFAULT_PAGE_SIZE,
-                 kv_pool_pages: Optional[int] = None):
+                 kv_pool_pages: Optional[int] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 preempt_retry_budget: int = 2,
+                 preempt_backoff: float = 0.02,
+                 kernel_fault_threshold: int = 2,
+                 max_step_retries: int = 2):
         self.cfg = cfg
         # Execution policy for every jitted step this engine compiles —
         # captured once at construction (explicit arg > ambient default)
         # so a later ambient change can never retrace a live engine
-        # under different kernels.
+        # under different kernels. The ONE exception is the engine's own
+        # fault handler, which may degrade backend -> "xla" after
+        # repeated kernel faults (see _degrade_to_xla).
         self.policy = _pol.resolve(policy)
         paged = self.policy.kv_layout == "paged"
         if paged and cfg.family not in ("dense", "moe", "vlm"):
@@ -136,6 +177,12 @@ class ServingEngine:
         self.eos_id = eos_id
         self.sampler = sampler or Sampler()
         self.scheduler = SlotScheduler(max_slots)
+        self.injector = fault_injector
+        self.preempt_retry_budget = preempt_retry_budget
+        self.preempt_backoff = preempt_backoff
+        self.kernel_fault_threshold = kernel_fault_threshold
+        self.max_step_retries = max_step_retries
+        self.straggler = StragglerDetector()
 
         self.page_size = page_size if paged else None
         self.pool: Optional[KVPagePool] = None
@@ -165,10 +212,7 @@ class ServingEngine:
                 for (path, b), s in zip(flat, jax.tree.leaves(small))]
             self._write = jax.jit(self._write_slot, donate_argnums=(0,))
 
-        self._prefill = jax.jit(TL.make_prefill(cfg, policy=self.policy),
-                                donate_argnums=(2,))
-        self._step = jax.jit(TL.make_serve_step(cfg, policy=self.policy),
-                             donate_argnums=(3,))
+        self._build_steps()
 
         # per-slot device-mirrored state (pos < 0 = inactive slot)
         self._tokens = np.zeros((max_slots, 1), np.int32)
@@ -186,6 +230,25 @@ class ServingEngine:
         self.tokens_emitted = 0
         self.peak_occupancy = 0
         self._step_times: List[float] = []
+        # fault-tolerance counters
+        self.expired = 0
+        self.cancelled = 0
+        self.preempted = 0             # preemption EVENTS (req may repeat)
+        self.quarantined = 0
+        self.kernel_faults = 0
+        self.crashed_steps = 0         # steps that exhausted their retries
+        self.degraded = False
+        self._admissions = 0           # successful admissions (ordinal)
+
+    def _build_steps(self) -> None:
+        """(Re)compile the jitted prefill/serve steps under the current
+        policy — called at construction and again by _degrade_to_xla."""
+        self._prefill = jax.jit(TL.make_prefill(self.cfg,
+                                                policy=self.policy),
+                                donate_argnums=(2,))
+        self._step = jax.jit(TL.make_serve_step(self.cfg,
+                                                policy=self.policy),
+                             donate_argnums=(3,))
 
     # -- cache slot copy ----------------------------------------------
     def _write_slot(self, cache, sub, slot):
@@ -251,12 +314,13 @@ class ServingEngine:
 
     # -- submission ----------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, arrival_time: float = 0.0,
+               deadline: Optional[float] = None, priority: int = 0,
                enc_frames=None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        assert prompt.size >= 1
-        assert max_new_tokens >= 1
-        assert prompt.size + max_new_tokens <= self.max_len, \
-            (prompt.size, max_new_tokens, self.max_len)
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request (prompt {prompt.size} + gen {max_new_tokens}) "
+                f"exceeds the engine's max_len {self.max_len}")
         if self.cfg.family == "encdec" and enc_frames is None:
             raise ValueError("encdec requests need enc_frames")
         if self.pool is not None:
@@ -271,7 +335,8 @@ class ServingEngine:
                     f"but the pool only has {self.pool.n_pages}")
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
-                      arrival_time=arrival_time, enc_frames=enc_frames)
+                      arrival_time=arrival_time, deadline=deadline,
+                      priority=priority, enc_frames=enc_frames)
         self._next_rid += 1
         self.requests.append(req)
         self.scheduler.submit(req)
@@ -299,34 +364,48 @@ class ServingEngine:
                 jnp.int32(j * self.page_size))
 
     def _admit(self, req: Request) -> None:
+        """Prefill `req` into a free slot. A resumed (previously
+        preempted) request re-prefills its FULL context — prompt plus
+        everything generated before eviction — so decode continues
+        exactly where it stopped (recompute-on-resume)."""
         slot = self.scheduler.admit(req)
+        ctx = req.context_tokens()
         plan = None
         if self.pool is not None:
-            plan = self.pool.admit_slot(slot, req.prompt,
-                                        req.max_new_tokens)
-        req.t_admitted = self._now()
+            plan = self.pool.admit_slot(slot, ctx, req.remaining_tokens)
+        if req.t_admitted is None:
+            req.t_admitted = self._now()
+        self._admissions += 1
         t0 = time.perf_counter()
 
-        L = req.prompt_len
+        L = len(ctx)
         chunk = self.prefill_chunk
         lb = L - (L % chunk) or L      # bucket down; short prompts exact
-        batch: Dict[str, Any] = {"tokens": jnp.asarray(req.prompt[None, :lb])}
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(ctx[None, :lb])}
         if self.cfg.family == "encdec":
             batch["enc_frames"] = jnp.asarray(req.enc_frames[None])
         sub = M.init_cache(self.cfg, 1, self.max_len)
         logits, sub = self._prefill(self.params, batch, sub)
         for i in range(lb, L):         # remainder: one-token steps
             logits, sub = self._step(
-                self.params, jnp.asarray(req.prompt[None, None, i]),
+                self.params, jnp.asarray(ctx[None, None, i]),
                 jnp.int32(i), sub)
         self._copy_prefill(slot, sub, plan)
 
         row = np.asarray(logits)[0, -1, :self.cfg.vocab]
-        tok = self.sampler(row)
         self.prefill_time += time.perf_counter() - t0
         self.prefill_tokens += L
         now = self._now()
-        req.t_first_token = now
+        if not np.isfinite(row).all():
+            # same sentinel as decode: a poisoned prefill quarantines
+            # this request only, never the engine
+            req.error = "non-finite logits at admission prefill"
+            self.quarantined += 1
+            self._release(req, slot, QUARANTINED, now)
+            return
+        tok = self.sampler(row)
+        if req.t_first_token is None:
+            req.t_first_token = now
         req.generated.append(tok)
         self.tokens_emitted += 1
         if self._done(req, tok):
@@ -339,18 +418,145 @@ class ServingEngine:
         return (req.n_generated >= req.max_new_tokens
                 or (self.eos_id is not None and tok == self.eos_id))
 
-    def _finish(self, req: Request, slot: int, now: float) -> None:
-        self.scheduler.release(slot)
+    # -- release / cancellation / preemption ----------------------------
+    def _release(self, req: Request, slot: int, status: str,
+                 now: float) -> None:
+        """Free a slot into a terminal request state, returning its KV
+        pages to the pool (refcount-safe: shared prefix pages and pages
+        mid-CoW just drop one reference; survivors keep their bytes)."""
+        self.scheduler.release(slot, status)
         if self.pool is not None:
             self.pool.release_slot(slot)
         self._pos[slot] = -1
         self._tokens[slot, 0] = 0
         req.t_finished = now
 
+    def _finish(self, req: Request, slot: int, now: float) -> None:
+        self._release(req, slot, FINISHED, now)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by id: a waiter leaves the queue, an active
+        request gives up its slot and KV pages immediately. Returns
+        False when the request is already terminal."""
+        req = next((r for r in self.requests if r.rid == rid), None)
+        if req is None:
+            raise ValueError(f"unknown request id {rid}")
+        if req.status in TERMINAL:
+            return False
+        now = self._now()
+        if req.status == WAITING:
+            self.scheduler.remove_waiting(req)
+            req.status = CANCELLED
+            req.t_finished = now
+        elif req.status == ACTIVE:
+            self._release(req, req.slot, CANCELLED, now)
+        self.cancelled += 1
+        return True
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict the request in `slot` back to the waiting queue,
+        reclaiming its pages. Resume backoff doubles per eviction so a
+        repeatedly-starved victim cannot thrash the admission loop."""
+        req = self.scheduler.active[slot]
+        backoff = self.preempt_backoff * (2 ** req.preemptions)
+        req.preemptions += 1
+        self.preempted += 1
+        self.scheduler.preempt(slot, resume_at=self._now() + backoff)
+        if self.pool is not None:
+            self.pool.release_slot(slot)
+        self._pos[slot] = -1
+        self._tokens[slot, 0] = 0
+
+    def _preempt_for(self, head: Request) -> bool:
+        """Pick and evict a victim so `head` can be admitted: the
+        lowest-priority, then youngest (latest-admitted) active request
+        that still has preemption-retry budget and is STRICTLY
+        outranked by the head. Equal-priority contention defers FCFS
+        instead (no churn; the pinned deferral semantics of a smooth
+        trace are unchanged). Returns False when no victim exists."""
+        cands = [(r.priority, -(r.t_admitted or 0.0), slot)
+                 for slot, r in self.scheduler.active.items()
+                 if r.preemptions < self.preempt_retry_budget
+                 and r.priority < head.priority]
+        if not cands:
+            return False
+        cands.sort()
+        self._preempt_slot(cands[0][2])
+        return True
+
+    # -- numeric / kernel fault handling --------------------------------
+    def _degrade_to_xla(self, err: BaseException) -> None:
+        global _DEGRADE_WARNED
+        self.policy = self.policy.replace(backend="xla")
+        self._build_steps()
+        self.degraded = True
+        if not _DEGRADE_WARNED:
+            _DEGRADE_WARNED = True
+            warnings.warn(
+                f"serving engine degraded to the 'xla' registry backend "
+                f"after {self.kernel_faults} kernel fault(s) (last: "
+                f"{err!r}); latency may regress but the trace continues",
+                RuntimeWarning, stacklevel=2)
+
+    def _run_step(self, step_idx: int):
+        """One guarded jitted decode step: kernel-level faults are
+        retried, and once they repeat past `kernel_fault_threshold` the
+        engine rebuilds its steps on the xla backend instead of
+        crashing. A step that exhausts its retries counts as crashed and
+        re-raises."""
+        tokens = jnp.asarray(self._tokens)
+        pos = jnp.asarray(self._pos)
+        attempts = 0
+        while True:
+            try:
+                if self.injector is not None:
+                    self.injector.before_kernel(step_idx)
+                return self._step(self.params, tokens, pos, self.cache)
+            except RuntimeError as e:   # kernel faults, incl. simulated
+                attempts += 1
+                self.kernel_faults += 1
+                if attempts > self.max_step_retries:
+                    self.crashed_steps += 1
+                    raise
+                if (self.kernel_faults >= self.kernel_fault_threshold
+                        and not self.degraded
+                        and self.policy.backend != "xla"):
+                    self._degrade_to_xla(e)
+
+    def _poison_slot_cache(self, slot: int) -> None:
+        """Chaos-harness hook: NaN a cache region PRIVATE to `slot` so
+        the fault surfaces through real attention math. Paged mode
+        poisons the slot's current write page (made private by
+        prepare_write just before this runs — a shared page is never
+        touched, pinning the sharer-survives contract); dense mode
+        poisons the slot's row of every float cache leaf."""
+        if self.pool is not None:
+            j = int(self._pos[slot]) // self.page_size
+            phys = int(self.pool.table[slot, j])
+            pages = dict(self.cache["pages"])
+            for name in ("k", "v"):
+                # int8 pages cannot hold a NaN; poison the scales
+                target = name + "s" if name + "s" in pages else name
+                pages[target] = pages[target].at[:, phys].set(jnp.nan)
+            self.cache = {"pages": pages, "table": self.cache["table"]}
+            return
+        leaves = jax.tree.leaves(self.cache)
+        out = []
+        for leaf, ax in zip(leaves, self._slot_axes):
+            if ax is None or not jnp.issubdtype(leaf.dtype, jnp.floating):
+                out.append(leaf)
+                continue
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slot
+            out.append(leaf.at[tuple(idx)].set(jnp.nan))
+        self.cache = jax.tree.unflatten(self._treedef, out)
+
     # -- decode --------------------------------------------------------
     def _decode_once(self) -> None:
         active = self.scheduler.active
-        assert active
+        if not active:
+            raise ValueError("decode step with no active slots")
+        step_idx = self.decode_steps
         if self.pool is not None:
             # Make every slot's write position privately owned BEFORE
             # the jitted step scatters into it: a write into a shared
@@ -363,20 +569,31 @@ class ServingEngine:
                     self.cache = self._copy_pg(
                         self.cache, jnp.int32(w.src), jnp.int32(w.dst))
             self._sync_table()
+        if self.injector is not None:
+            for slot in self.injector.corrupt_slots(step_idx, tuple(active)):
+                self._poison_slot_cache(slot)
         t0 = time.perf_counter()
-        logits, self.cache = self._step(
-            self.params, jnp.asarray(self._tokens),
-            jnp.asarray(self._pos), self.cache)
+        logits, self.cache = self._run_step(step_idx)
         rows = np.asarray(logits)[:, -1, :self.cfg.vocab]   # sync point
         dt = time.perf_counter() - t0
         self.decode_time += dt
         self._step_times.append(dt)
+        self.straggler.observe(step_idx, dt)
         self.decode_steps += 1
         self.decode_slot_steps += len(active)
         self.peak_occupancy = max(self.peak_occupancy, len(active))
+        if self.injector is not None:
+            rows = self.injector.poison_rows(step_idx, rows, tuple(active))
         now = self._now()
         for slot in sorted(active):
             req = active[slot]
+            if not np.isfinite(rows[slot]).all():
+                # quarantine ONLY the poisoned slot; co-scheduled rows
+                # are untouched (their logits never mix across slots)
+                req.error = f"non-finite logits at decode step {step_idx}"
+                self.quarantined += 1
+                self._release(req, slot, QUARANTINED, now)
+                continue
             tok = self.sampler(rows[slot])
             req.generated.append(tok)
             self.tokens_emitted += 1
@@ -388,15 +605,28 @@ class ServingEngine:
 
     # -- driving -------------------------------------------------------
     def step(self) -> bool:
-        """Admit every ready request, then run one decode step if any
-        slot is active. Returns False when all work is drained."""
+        """Drop expired waiters, admit every ready request (preempting
+        for a pool-starved FCFS head when a victim exists), then run one
+        decode step if any slot is active. Returns False when all work
+        is drained."""
         while True:
-            req = self.scheduler.next_admission(self._now())
+            now = self._now()
+            for req in self.scheduler.drop_expired(now):
+                req.t_finished = now
+                self.expired += 1
+            req = self.scheduler.next_admission(now)
             if req is None:
                 break
-            if self.pool is not None and not self.pool.can_admit(
-                    req.prompt, req.max_new_tokens):
-                break   # head waits for pages to free (strict FCFS)
+            if self.pool is not None:
+                denied = (self.injector is not None
+                          and self.injector.deny_admission(self._admissions))
+                ok = not denied and self.pool.can_admit(
+                    req.context_tokens(), req.remaining_tokens)
+                while not ok and self._preempt_for(req):
+                    ok = self.pool.can_admit(req.context_tokens(),
+                                             req.remaining_tokens)
+                if not ok:
+                    break   # head waits for pages to free
             self._admit(req)
         if self.scheduler.n_active:
             self._decode_once()
@@ -423,6 +653,17 @@ class ServingEngine:
             (n_emitted, self.tokens_emitted)
         waits = [r.t_admitted - r.arrival_time for r in self.requests
                  if r.t_admitted is not None]
+        # goodput: only tokens of requests that FINISHED (and met their
+        # deadline, if they had one) were worth emitting; everything a
+        # cancelled / expired / quarantined / late request decoded is
+        # wasted work. (Preemption waste is re-PREFILL compute and so
+        # shows up in prefill_tokens, not here — no token is emitted
+        # twice.)
+        useful = sum(r.n_generated for r in done
+                     if r.missed_deadline is not True)
+        deadlined = [r for r in self.requests
+                     if r.deadline is not None and r.status in TERMINAL]
+        missed = [r for r in deadlined if r.missed_deadline]
         out = {
             "n_requests": len(self.requests),
             "n_finished": len(done),
@@ -445,7 +686,22 @@ class ServingEngine:
             "decode_step_p99_s": percentile(self._step_times, 99),
             "admission_wait_p50_s": percentile(waits, 50),
             "admission_wait_p99_s": percentile(waits, 99),
+            # fault tolerance
+            "expired": self.expired,
+            "cancelled": self.cancelled,
+            "preempted": self.preempted,
+            "quarantined": self.quarantined,
+            "kernel_faults": self.kernel_faults,
+            "crashed_steps": self.crashed_steps,
+            "degraded": self.degraded,
+            "straggler_steps": len(self.straggler.flagged),
+            "useful_tokens": useful,
+            "goodput": useful / max(self.tokens_emitted, 1),
+            "deadline_miss_rate": (len(missed) / len(deadlined)
+                                   if deadlined else float("nan")),
         }
+        if self.injector is not None:
+            out["faults_injected"] = self.injector.report()
         if self.pool is not None:
             out["kv_pool"] = self.pool.report()
         return out

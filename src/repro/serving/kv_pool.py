@@ -137,6 +137,14 @@ class KVPagePool:
         return p
 
     def _release_page(self, p: int) -> None:
+        if self.refcount[p] <= 0:
+            # A slot-level double release is a harmless no-op (the table
+            # row is already -1); reaching a page twice means a table /
+            # refcount divergence — fail loudly instead of corrupting
+            # the free list.
+            raise ValueError(
+                f"double release of page {p} (refcount "
+                f"{int(self.refcount[p])})")
         self.refcount[p] -= 1
         if self.refcount[p] == 0:
             h = self._hash_of.pop(p, None)

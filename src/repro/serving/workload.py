@@ -12,26 +12,72 @@ parameters" always mean the same workload:
   `prefix_len`-token system prompt followed by a short random suffix.
   This is the workload where the paged KV cache's prefix sharing pays:
   N requests pin one copy of the prefix pages instead of N.
+
+Both traces optionally carry per-request fault-tolerance fields:
+
+* ``deadline`` (relative seconds after arrival — the TraceItem stores
+  the ABSOLUTE engine-clock deadline, ready for ``engine.submit``) and
+  ``priority_levels`` (uniform choice per request; higher outranks
+  lower in the engine's preemption victim selection).
+* ``burst_size > 1`` switches the arrival process to bursty: requests
+  arrive in groups of `burst_size` that hit the engine simultaneously,
+  with exponential gaps between groups scaled so the long-run rate
+  still equals `arrival_rate` — the pool-exhaustion worst case that a
+  smooth Poisson trace never produces.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-TraceItem = Tuple[np.ndarray, int, float, Optional[np.ndarray]]
-#                 (prompt, max_new_tokens, arrival_time, enc_frames)
+
+class TraceItem(NamedTuple):
+    prompt: np.ndarray
+    gen: int
+    arrival: float
+    enc_frames: Optional[np.ndarray] = None
+    deadline: Optional[float] = None       # absolute engine-clock seconds
+    priority: int = 0
+
+
+def _arrivals(rng: np.random.Generator, n: int, arrival_rate: float,
+              burst_size: int) -> np.ndarray:
+    """Arrival times: Poisson gaps per request, or — with burst_size > 1
+    — per *group* of simultaneous requests, gap mean scaled by the
+    group size so the long-run request rate is unchanged."""
+    if burst_size < 1:
+        raise ValueError(f"burst_size must be >= 1, got {burst_size}")
+    if arrival_rate <= 0:
+        return np.zeros(n)
+    if burst_size == 1:
+        return np.cumsum(rng.exponential(1.0 / arrival_rate, n))
+    n_bursts = -(-n // burst_size)
+    times = np.cumsum(rng.exponential(burst_size / arrival_rate, n_bursts))
+    return np.repeat(times, burst_size)[:n]
+
+
+def _priorities(rng: np.random.Generator, n: int,
+                priority_levels: Sequence[int]) -> np.ndarray:
+    levels = np.asarray(list(priority_levels), np.int64)
+    if levels.size == 0:
+        raise ValueError("priority_levels must be non-empty")
+    return levels[rng.integers(0, levels.size, n)]
 
 
 def synthetic_trace(cfg, n: int, *, rng: np.random.Generator,
                     len_range: Tuple[int, int] = (8, 48), gen: int = 16,
-                    arrival_rate: float = 0.0) -> List[TraceItem]:
+                    arrival_rate: float = 0.0,
+                    deadline: Optional[float] = None,
+                    priority_levels: Sequence[int] = (0,),
+                    burst_size: int = 1) -> List[TraceItem]:
     lo, hi = len_range
-    assert 1 <= lo <= hi, len_range
+    if not 1 <= lo <= hi:
+        raise ValueError(f"bad len_range {len_range}")
     lens = rng.integers(lo, hi + 1, n)
-    arrivals = (np.cumsum(rng.exponential(1.0 / arrival_rate, n))
-                if arrival_rate > 0 else np.zeros(n))
+    arrivals = _arrivals(rng, n, arrival_rate, burst_size)
+    prios = _priorities(rng, n, priority_levels)
     trace: List[TraceItem] = []
     for i in range(n):
         prompt = rng.integers(0, cfg.vocab, int(lens[i])).astype(np.int32)
@@ -39,7 +85,9 @@ def synthetic_trace(cfg, n: int, *, rng: np.random.Generator,
         if cfg.family == "encdec":
             enc = rng.normal(size=(cfg.enc_ctx, cfg.d_model)) \
                 .astype(np.float32)
-        trace.append((prompt, gen, float(arrivals[i]), enc))
+        dl = None if deadline is None else float(arrivals[i]) + deadline
+        trace.append(TraceItem(prompt, gen, float(arrivals[i]), enc,
+                               dl, int(prios[i])))
     return trace
 
 
@@ -47,18 +95,23 @@ def prefix_heavy_trace(cfg, n: int, *, rng: np.random.Generator,
                        prefix_len: int = 32,
                        suffix_range: Tuple[int, int] = (2, 12),
                        gen: int = 8,
-                       arrival_rate: float = 0.0) -> List[TraceItem]:
+                       arrival_rate: float = 0.0,
+                       deadline: Optional[float] = None,
+                       priority_levels: Sequence[int] = (0,),
+                       burst_size: int = 1) -> List[TraceItem]:
     """N requests sharing one `prefix_len`-token system prompt, each
     with a uniform [lo, hi] random-token suffix (hi inclusive; lo may be
-    0 — identical prompts, the copy-on-write worst case). Arrival model
-    matches synthetic_trace."""
+    0 — identical prompts, the copy-on-write worst case). Arrival,
+    deadline and priority models match synthetic_trace."""
     lo, hi = suffix_range
-    assert 0 <= lo <= hi, suffix_range
-    assert prefix_len >= 1, prefix_len
+    if not 0 <= lo <= hi:
+        raise ValueError(f"bad suffix_range {suffix_range}")
+    if prefix_len < 1:
+        raise ValueError(f"prefix_len must be >= 1, got {prefix_len}")
     prefix = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
     lens = rng.integers(lo, hi + 1, n)
-    arrivals = (np.cumsum(rng.exponential(1.0 / arrival_rate, n))
-                if arrival_rate > 0 else np.zeros(n))
+    arrivals = _arrivals(rng, n, arrival_rate, burst_size)
+    prios = _priorities(rng, n, priority_levels)
     trace: List[TraceItem] = []
     for i in range(n):
         suffix = rng.integers(0, cfg.vocab, int(lens[i])).astype(np.int32)
@@ -67,5 +120,7 @@ def prefix_heavy_trace(cfg, n: int, *, rng: np.random.Generator,
         if cfg.family == "encdec":
             enc = rng.normal(size=(cfg.enc_ctx, cfg.d_model)) \
                 .astype(np.float32)
-        trace.append((prompt, gen, float(arrivals[i]), enc))
+        dl = None if deadline is None else float(arrivals[i]) + deadline
+        trace.append(TraceItem(prompt, gen, float(arrivals[i]), enc,
+                               dl, int(prios[i])))
     return trace

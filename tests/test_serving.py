@@ -426,3 +426,124 @@ def test_serve_cli_mixed_trace_smoke():
                          "--prompt-len-max", "20", "--arrival-rate", "0"])
     assert report["n_finished"] == 5
     assert report["mean_occupancy"] <= 2.0
+
+
+def test_scheduler_and_request_validation_errors():
+    """Bare asserts became ValueErrors that NAME the offender: bad
+    arguments fail with an actionable message, not an AssertionError."""
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 100, (8,)).astype(np.int32)
+    with pytest.raises(ValueError, match="max_slots"):
+        SlotScheduler(0)
+    with pytest.raises(ValueError, match="request .*: empty prompt"):
+        Request(rid=3, prompt=np.empty((0,), np.int32), max_new_tokens=4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(rid=4, prompt=prompt, max_new_tokens=0)
+    with pytest.raises(ValueError, match="deadline"):
+        Request(rid=5, prompt=prompt, max_new_tokens=4,
+                arrival_time=2.0, deadline=1.0)
+
+    sched = SlotScheduler(1)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=4)
+    sched.submit(req)
+    with pytest.raises(ValueError, match="request 0"):   # double submit
+        sched.submit(req)
+    sched.admit(req)
+    with pytest.raises(ValueError, match="request 0"):   # not waiting
+        sched.admit(req)
+    with pytest.raises(ValueError, match="slot 7"):
+        sched.release(7)
+    with pytest.raises(ValueError, match="slot 5.*preempt"):
+        sched.preempt(5, resume_at=0.0)
+    sched.release(req.slot)
+    with pytest.raises(ValueError, match="slot 0"):      # double release
+        sched.release(0)
+
+
+def test_kv_pool_release_during_cow_and_double_release():
+    """Satellite: releasing a CoW participant mid-divergence leaves the
+    survivor's mapping and refcounts intact; slot-level double release
+    is a no-op while a page-level double release fails loudly."""
+    from repro.serving import KVPagePool
+    pool = KVPagePool(n_pages=16, page_size=4, max_slots=4,
+                      pages_per_slot=4)
+    prompt = np.arange(10, dtype=np.int32)     # 2 full pages + partial tail
+    pool.admit_slot(0, prompt, 4)
+    plan = pool.admit_slot(1, prompt, 4)
+    tail = dict(plan.shared)[2]
+    w = pool.prepare_write(1, 10)              # slot 1 CoWs the tail page
+    assert w.kind == "cow" and pool.refcount[tail] == 1
+    # release the ORIGINAL owner right after the split: the writer's
+    # fully-shared prefix pages survive, its private CoW page survives
+    pool.release_slot(0)
+    for j in (0, 1):
+        assert pool.refcount[pool.table[1, j]] == 1
+    assert pool.refcount[w.dst] == 1 and pool.refcount[tail] == 0
+    assert pool.table[1, 2] == w.dst
+    # the survivor keeps writing into its now-private mapping
+    assert pool.prepare_write(1, 11) is None
+    # slot-level double release: table row already cleared -> no-op
+    pool.release_slot(0)
+    pool.release_slot(1)
+    assert (pool.refcount == 0).all() and pool.n_free == pool.n_pages
+    pool.release_slot(1)                       # still a no-op
+    # page-level double release means table/refcount divergence: loud
+    with pytest.raises(ValueError, match="double release of page"):
+        pool._release_page(w.dst)
+
+
+def test_engine_release_during_cow_device_bytes_intact():
+    """Device-checked: cancelling the CoW *survivor's sharer* right
+    after the split must not disturb the surviving slot's page bytes —
+    its prefix rows still equal the released slot's original page."""
+    from repro.core.policy import Policy
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_slots=2, max_len=32,
+                        policy=Policy(kv_layout="paged"), page_size=8)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab, (10,)).astype(np.int32)
+    r0 = eng.submit(prompt.copy(), 4)
+    r1 = eng.submit(prompt.copy(), 4)
+    eng.step()                                 # tail page CoW'd for slot 1
+    assert eng.pool.stats.cow_copies == 1
+    pa, pb = int(eng.pool.table[0, 1]), int(eng.pool.table[1, 1])
+    before = {n: np.asarray(eng.cache["pages"][n])[:, pb].copy()
+              for n in ("k", "v")}
+    assert eng.cancel(r0.rid)                  # release slot 0 mid-CoW
+    for n in ("k", "v"):                       # survivor's page untouched
+        np.testing.assert_array_equal(
+            np.asarray(eng.cache["pages"][n])[:, pb], before[n])
+    eng.run()
+    assert r1.generated == _reference_generate(cfg, params, prompt, 4)
+    assert (eng.pool.refcount == 0).all()
+    _ = pa                                     # slot 0's page, now freed
+
+
+def test_workload_bursty_deadlines_priorities():
+    from repro.serving import TraceItem, synthetic_trace
+    from repro.serving.workload import _arrivals
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    rng = np.random.default_rng(0)
+    trace = synthetic_trace(cfg, 12, rng=rng, len_range=(8, 16), gen=4,
+                            arrival_rate=8.0, deadline=2.5,
+                            priority_levels=(0, 1, 2), burst_size=4)
+    assert all(isinstance(it, TraceItem) for it in trace)
+    arr = np.array([it.arrival for it in trace])
+    # bursty: groups of 4 arrive at the SAME instant, gaps between groups
+    assert len(np.unique(arr)) == 3
+    assert (np.diff(arr) >= 0).all()
+    # deadline is stored ABSOLUTE (arrival + relative)
+    assert all(abs(it.deadline - (it.arrival + 2.5)) < 1e-12
+               for it in trace)
+    assert {it.priority for it in trace} <= {0, 1, 2}
+    # long-run rate preserved: burst gaps scale with the group size
+    rng2 = np.random.default_rng(1)
+    smooth = _arrivals(rng2, 4000, 8.0, 1)
+    rng3 = np.random.default_rng(1)
+    bursty = _arrivals(rng3, 4000, 8.0, 4)
+    assert abs(smooth[-1] / bursty[-1] - 1.0) < 0.15
+    with pytest.raises(ValueError, match="burst_size"):
+        synthetic_trace(cfg, 4, rng=rng, burst_size=0)
+    with pytest.raises(ValueError, match="priority_levels"):
+        synthetic_trace(cfg, 4, rng=rng, priority_levels=())
