@@ -1,18 +1,30 @@
 """Continuous-batching serving benchmark: prefill/decode throughput and
-per-request latency percentiles under a mixed-length arrival trace.
+per-request latency percentiles across the workload scenario registry.
 
-Three traces per arch on the reduced config (CPU smoke numbers; the
-engine itself is what a TPU deployment would run):
+Every scenario resolves through ``serving.workload.TRACES`` (the same
+registry ``serve.py --workload`` uses) and reports per-scenario
+p50/p99 decode-step latency plus goodput in ONE table, so "where does
+latency come from under THIS traffic shape" is a row lookup, not a
+cross-file diff:
 
-  * burst  — all requests at t=0, queueing on the slot pool: measures
-    steady-state decode tok/s and slot occupancy;
-  * poisson — arrivals at a finite rate: measures the latency
-    distribution (p50/p95) a request actually sees;
-  * bursty — grouped arrivals (burst_size > 1) with per-request
-    deadlines: measures goodput and the deadline-miss rate under the
-    pool-exhaustion worst case a smooth trace never produces.
+  * burst        — all requests at t=0, queueing on the slot pool;
+  * poisson      — arrivals at a finite rate (the latency a request
+    actually sees);
+  * bursty_deadline — compound-Poisson groups + per-request deadlines
+    (goodput / deadline-miss under the pool-exhaustion worst case);
+  * prefix_heavy — shared system prompt (prefix sharing, and where
+    speculation wins);
+  * long_context — long prompts, short generations (prefill-bound).
 
-A fourth section pits the paged KV cache against dense rows at EQUAL
+A speculative-decoding section runs the draft/verify engine on the
+prefix-heavy trace: a self-draft (draft params = target params, the
+acceptance-rate ceiling) must push tokens-per-step past 1.5 (asserted
+— this is the subsystem's reason to exist), while a mismatched random
+draft and a temperature-sampling run show where speculation loses.
+``spec_acceptance_rate`` / ``tokens_per_step`` ride the derived column
+into the BENCH JSON via ``common.write_bench_json``.
+
+A capacity section pits the paged KV cache against dense rows at EQUAL
 KV byte budget on a prefix-heavy chat trace: the dense engine can only
 afford a couple of max_len slots, while page granularity + shared
 prefix pages + int8 pages buy strictly more concurrent occupancy from
@@ -39,7 +51,8 @@ import repro.configs as C
 from benchmarks.common import emit
 from repro.core.policy import Policy
 from repro.models import model as M
-from repro.serving import ServingEngine, prefix_heavy_trace, synthetic_trace
+from repro.serving import (ServingEngine, Sampler, make_sampler, make_trace,
+                           prefix_heavy_trace)
 
 ARCHS = ("qwen3-0.6b", "mamba2-2.7b")
 N_REQUESTS = 10
@@ -49,8 +62,33 @@ LEN_RANGE = (8, 48)           # inclusive, as in launch/serve.py
 
 # bursty + deadline scenario (fault-tolerance accounting surface)
 BURSTY_RATE = 16.0
-BURSTY_SIZE = 4
+BURSTY_MEAN = 4.0
 BURSTY_DEADLINE = 30.0        # generous on CPU; misses only under chaos
+
+#: (label, TRACES name, trace kwargs) — every scenario resolves through
+#: the workload registry so the benchmark and serve.py --workload can
+#: never drift apart on what a scenario means.
+SCENARIOS = (
+    ("burst", "mixed", dict(len_range=LEN_RANGE, gen=GEN,
+                            arrival_rate=0.0)),
+    ("poisson", "mixed", dict(len_range=LEN_RANGE, gen=GEN,
+                              arrival_rate=8.0)),
+    ("bursty_deadline", "bursty", dict(len_range=LEN_RANGE, gen=GEN,
+                                       arrival_rate=BURSTY_RATE,
+                                       burst_mean=BURSTY_MEAN,
+                                       deadline=BURSTY_DEADLINE)),
+    ("prefix_heavy", "prefix_heavy", dict(prefix_len=32,
+                                          suffix_range=(2, 12), gen=GEN)),
+    ("long_context", "long_context", dict(len_range=(96, 160), gen=4)),
+)
+
+# speculative decoding on the prefix-heavy trace (where drafts track)
+SPEC_ARCH = "qwen3-0.6b"
+SPEC_DRAFT = "granite-3-8b"   # mismatched-draft row (random params)
+SPEC_K = 4
+SPEC_REQUESTS = 8
+SPEC_GEN = 8
+SPEC_TPS_FLOOR = 1.5          # acceptance criterion: self-draft beats this
 
 # prefix-heavy capacity shoot-out (equal KV bytes across layouts)
 CAP_ARCH = "qwen3-0.6b"
@@ -81,36 +119,108 @@ def _derived(rep, reqs) -> str:
             f"adm_wait_p50_ms={rep['admission_wait_p50_s']*1e3:.0f};"
             f"adm_wait_p99_ms={rep['admission_wait_p99_s']*1e3:.0f};"
             f"goodput={rep['goodput']:.2f};"
+            f"tokens_per_step={rep['tokens_per_step']:.2f};"
             f"expired={rep['expired']};cancelled={rep['cancelled']};"
             f"preempted={rep['preempted']};"
             f"quarantined={rep['quarantined']};"
             f"deadline_miss={'nan' if miss != miss else f'{miss:.2f}'}")
 
 
+def _spec_derived(rep, reqs) -> str:
+    return (_derived(rep, reqs)
+            + f";spec_acceptance_rate={rep['spec_acceptance_rate']:.3f}"
+            f";spec_rounds={rep['spec_rounds']}"
+            f";spec_accepted={rep['spec_accepted']}"
+            f";spec_proposed={rep['spec_proposed']}"
+            f";draft_time_ms={rep['draft_time_s']*1e3:.0f}")
+
+
+def _print_table(title: str, rows) -> None:
+    """One aligned per-scenario table: decode-step p50/p99 + goodput —
+    the cross-scenario comparison the per-row derived strings bury."""
+    print(f"# {title}")
+    hdr = f"# {'scenario':<18} {'p50_ms':>8} {'p99_ms':>8} " \
+          f"{'goodput':>8} {'tok/step':>9}"
+    print(hdr)
+    for label, rep in rows:
+        print(f"# {label:<18} {rep['decode_step_p50_s']*1e3:8.2f} "
+              f"{rep['decode_step_p99_s']*1e3:8.2f} "
+              f"{rep['goodput']:8.2f} {rep['tokens_per_step']:9.2f}")
+
+
 def run() -> None:
     for name in ARCHS:
         cfg = C.get_config(name, reduced=True)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
-        scenarios = (
-            ("burst", dict(arrival_rate=0.0)),
-            ("poisson", dict(arrival_rate=8.0)),
-            ("bursty_deadline", dict(arrival_rate=BURSTY_RATE,
-                                     burst_size=BURSTY_SIZE,
-                                     deadline=BURSTY_DEADLINE)),
-        )
-        for label, kw in scenarios:
+        table = []
+        for label, trace_name, kw in SCENARIOS:
             rng = np.random.default_rng(0)
+            trace = make_trace(trace_name, cfg, N_REQUESTS, rng=rng, **kw)
+            max_len = max(len(it.prompt) + it.gen for it in trace)
             eng = ServingEngine(cfg, params, max_slots=MAX_SLOTS,
-                                max_len=LEN_RANGE[1] + GEN)
-            trace = synthetic_trace(cfg, N_REQUESTS, rng=rng,
-                                    len_range=LEN_RANGE, gen=GEN, **kw)
+                                max_len=max_len)
             reqs = _submit_all(eng, trace)
             rep = eng.run()
             mean_lat = float(np.mean([r.latency for r in reqs
                                       if r.latency is not None]))
+            table.append((label, rep))
             emit(f"serving_{name}_{label}_r{N_REQUESTS}s{MAX_SLOTS}",
                  mean_lat, _derived(rep, reqs))
+        _print_table(f"scenario suite: {name}", table)
+    run_speculative()
     run_paged_capacity()
+
+
+def run_speculative() -> None:
+    """Draft/verify engine on the prefix-heavy chat trace. Three rows:
+
+    * self-draft, greedy — draft params = target params, the acceptance
+      ceiling: every proposal the target would have emitted anyway is
+      accepted, so tokens-per-step approaches spec_k + 1. Must clear
+      SPEC_TPS_FLOOR (the subsystem's acceptance criterion).
+    * mismatched draft, greedy — an unrelated random-weights draft:
+      acceptance collapses to ~1/vocab and tokens-per-step to ~1. The
+      "speculation loses" row; the stream is STILL token-exact (the
+      rule guarantees it, tests/test_spec.py pins it).
+    * self-draft, temperature — high-entropy sampling: even a perfect
+      draft gets only p(x) acceptance per token, the distribution-
+      identity tax. Shows why measured acceptance, not draft quality
+      alone, must drive the spec_k choice (docs/EXPERIMENTS.md).
+    """
+    cfg = C.get_config(SPEC_ARCH, reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    dcfg = C.get_config(SPEC_DRAFT, reduced=True)
+    dparams = M.init_params(dcfg, jax.random.PRNGKey(1))
+    rows = []
+    runs = (
+        ("spec_self_greedy", (cfg, params), Sampler()),
+        ("spec_mismatch_greedy", (dcfg, dparams), Sampler()),
+        ("spec_self_temp", (cfg, params),
+         make_sampler("temperature", temperature=1.0, seed=0)),
+    )
+    tps = {}
+    for label, draft, sampler in runs:
+        rng = np.random.default_rng(0)
+        trace = prefix_heavy_trace(cfg, SPEC_REQUESTS, rng=rng,
+                                   prefix_len=32, suffix_range=(2, 12),
+                                   gen=SPEC_GEN)
+        max_len = max(len(it.prompt) + it.gen for it in trace)
+        eng = ServingEngine(cfg, params, max_slots=MAX_SLOTS,
+                            max_len=max_len, sampler=sampler,
+                            draft=draft, spec_k=SPEC_K)
+        reqs = _submit_all(eng, trace)
+        rep = eng.run()
+        mean_lat = float(np.mean([r.latency for r in reqs
+                                  if r.latency is not None]))
+        tps[label] = rep["tokens_per_step"]
+        rows.append((label, rep))
+        emit(f"serving_{SPEC_ARCH}_{label}_k{SPEC_K}", mean_lat,
+             _spec_derived(rep, reqs))
+    _print_table(f"speculative decoding: {SPEC_ARCH} (k={SPEC_K})", rows)
+    # the headline claim: batched verification + a draft that tracks the
+    # target turns > 1.5 tokens per target step on prefix-heavy chat
+    assert tps["spec_self_greedy"] > SPEC_TPS_FLOOR, tps
+    print(f"# speculative tokens/step: {tps}")
 
 
 def run_paged_capacity() -> None:
@@ -169,4 +279,7 @@ def run_paged_capacity() -> None:
 
 
 if __name__ == "__main__":
+    from benchmarks.common import write_bench_json
+    print("name,us_per_call,derived")
     run()
+    print(f"# wrote {write_bench_json(tag='serving')}")

@@ -66,6 +66,11 @@ _EXPORTS = {
     "make_sampler": ("repro.serving", "make_sampler"),
     "synthetic_trace": ("repro.serving", "synthetic_trace"),
     "prefix_heavy_trace": ("repro.serving", "prefix_heavy_trace"),
+    "bursty_trace": ("repro.serving", "bursty_trace"),
+    "long_context_trace": ("repro.serving", "long_context_trace"),
+    "make_trace": ("repro.serving", "make_trace"),
+    # speculative decoding (serving.spec)
+    "SpecDecoder": ("repro.serving", "SpecDecoder"),
     # fault tolerance (serving.faults)
     "FaultInjector": ("repro.serving", "FaultInjector"),
     "SimulatedKernelFault": ("repro.serving", "SimulatedKernelFault"),

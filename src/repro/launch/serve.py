@@ -17,6 +17,18 @@ Chaos mode (deterministic fault injection; the run must SURVIVE):
         --max-slots 2 --kv-layout paged --page-size 8 \
         --chaos-nan-step 3 --chaos-deny-admissions 2
 
+Speculative decoding (draft proposes, target verifies in one batched
+forward; --check-exact pins greedy token-exactness vs the plain dense
+reference engine):
+
+    PYTHONPATH=src python -m repro.launch.serve --reduced --requests 8 \
+        --arch qwen1.5-32b --draft qwen3-0.6b --spec-k 4 --check-exact
+
+Named workload scenarios (serving.workload.TRACES):
+
+    PYTHONPATH=src python -m repro.launch.serve --reduced --requests 8 \
+        --workload bursty --arrival-rate 4
+
 The engine (repro.serving) owns slot scheduling, per-slot prefill and
 the shared jitted serve_step with a per-slot `pos` vector; this module
 only builds a synthetic workload, constructs the execution Policy from
@@ -37,19 +49,28 @@ from repro.core import policy as policy_mod
 from repro.core.policy import LEGACY_BACKEND_NAMES, Policy
 from repro.models import model as M
 from repro.serving import DEFAULT_PREFILL_CHUNK, FaultInjector, \
-    ServingEngine, make_sampler, prefix_heavy_trace, synthetic_trace
+    ServingEngine, TRACES, make_sampler, make_trace, prefix_heavy_trace, \
+    synthetic_trace
 from repro.serving.request import FINISHED
 
 
 def build_workload(cfg, args, rng):
-    """Synthetic trace (TraceItem list): prefix-heavy chat when
-    --prefix-len is set, mixed-length Poisson when --requests is set,
-    else the uniform degenerate batch. Deadlines, priorities and bursty
-    arrivals apply to all three."""
+    """Synthetic trace (TraceItem list): a named scenario from the
+    workload registry when --workload is set; otherwise prefix-heavy
+    chat when --prefix-len is set, mixed-length Poisson when --requests
+    is set, else the uniform degenerate batch. Deadlines, priorities
+    and bursty arrivals apply throughout."""
     ft = dict(deadline=args.deadline or None,
               priority_levels=tuple(int(p) for p in
                                     args.priority_levels.split(",")),
               burst_size=args.burst_size)
+    if args.workload:
+        n = args.requests or args.batch
+        kw = dict(gen=args.gen, arrival_rate=args.arrival_rate, **ft)
+        if args.workload == "bursty":
+            # compound-Poisson group sizes replace the fixed burst knob
+            kw.pop("burst_size")
+        return make_trace(args.workload, cfg, n, rng=rng, **kw)
     if args.prefix_len:
         n = args.requests or args.batch
         return prefix_heavy_trace(cfg, n, rng=rng,
@@ -175,6 +196,16 @@ def main(argv=None):
                          "workload to the prefix-heavy chat trace")
     ap.add_argument("--suffix-min", type=int, default=2)
     ap.add_argument("--suffix-max", type=int, default=12)
+    ap.add_argument("--workload", choices=sorted(TRACES), default="",
+                    help="named scenario from the workload registry "
+                         "(overrides the implicit trace selection)")
+    # speculative decoding (serving.spec)
+    ap.add_argument("--draft", choices=ARCH_NAMES, default="",
+                    help="draft model arch: enables speculative decoding "
+                         "(draft proposes --spec-k tokens per round, the "
+                         "target verifies them in ONE batched forward)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative round")
     ap.add_argument("--check-exact", action="store_true",
                     help="re-run the trace on a dense f32-KV reference "
                          "engine and assert identical token streams "
@@ -248,11 +279,16 @@ def main(argv=None):
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     sampler = make_sampler(args.sampler, temperature=args.temperature,
                            top_k=args.top_k, seed=args.seed)
+    draft = None
+    if args.draft:
+        dcfg = get_config(args.draft, reduced=args.reduced)
+        draft = (dcfg, M.init_params(dcfg, jax.random.PRNGKey(args.seed + 1)))
     engine = ServingEngine(cfg, params, max_slots=max_slots,
                            max_len=max_len, sampler=sampler, policy=policy,
                            page_size=args.page_size,
                            kv_pool_pages=args.kv_pool_pages or None,
-                           fault_injector=injector)
+                           fault_injector=injector,
+                           draft=draft, spec_k=args.spec_k)
     requests = [engine.submit(it.prompt, it.gen, arrival_time=it.arrival,
                               deadline=it.deadline, priority=it.priority,
                               enc_frames=it.enc_frames)
@@ -279,6 +315,13 @@ def main(argv=None):
           f"quarantined {report['quarantined']}, "
           f"deadline-miss rate {report['deadline_miss_rate']:.2f}, "
           f"stragglers {report['straggler_steps']}")
+    if "spec_acceptance_rate" in report:
+        print(f"speculative: draft={args.draft} k={args.spec_k}, "
+              f"{report['spec_rounds']} rounds, acceptance "
+              f"{report['spec_acceptance_rate']:.2f} "
+              f"({report['spec_accepted']}/{report['spec_proposed']}), "
+              f"tokens/step {report['tokens_per_step']:.2f}, "
+              f"draft time {report['draft_time_s']*1e3:.0f}ms")
     if "kv_pool" in report:
         kv = report["kv_pool"]
         print(f"kv pool: {kv['n_pages']} pages x {kv['page_size']} tok, "
@@ -291,8 +334,9 @@ def main(argv=None):
         check_chaos(engine, report, requests)
 
     if args.check_exact:
-        # Same trace, dense rows, full-precision KV: the paged/int8
-        # engine must emit byte-identical greedy token streams.
+        # Same trace, dense rows, full-precision KV, NO draft: the
+        # paged / int8 / speculative engine must emit byte-identical
+        # greedy token streams vs the plain reference.
         ref_pol = policy.replace(kv_layout="dense", quant_kv="off")
         ref = ServingEngine(
             cfg, params, max_slots=max_slots, max_len=max_len,

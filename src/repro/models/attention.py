@@ -292,6 +292,10 @@ def attn_apply(
     cache_pos=None,                # write offset: scalar, or (B,) per-slot
                                    # vector (decode; pos < 0 = inactive slot,
                                    # cache row left untouched)
+    n_valid=None,                  # (B,) count of valid tokens in a multi-
+                                   # token per-slot chunk (speculative verify):
+                                   # row writes past n_valid are dropped and
+                                   # their keys masked; None = all t valid
     enc_kv: Optional[tuple] = None,  # cross-attn: precomputed (k, v)
     kv_table: Optional[jnp.ndarray] = None,  # (B, pages_per_slot) page table:
                                    # cache is a PAGE POOL {"k","v"[,"ks","vs"]}
@@ -340,28 +344,33 @@ def attn_apply(
 
     new_cache = None
     if cache is not None and kv_table is not None:
-        # Paged decode: `cache` is this layer's page POOL, not per-slot
-        # rows. Each slot's k/v row lands at (table[slot, pos//ps],
-        # pos%ps) — the engine's prepare_write has already made that
-        # page privately writable (CoW), so the scatter never touches
-        # shared bytes. Inactive slots (pos < 0) and unmapped table
-        # entries route out of bounds; mode="drop" skips them.
-        assert t == 1 and pos_vec, \
-            "paged KV cache requires per-slot one-token decode steps"
+        # Paged decode / verify: `cache` is this layer's page POOL, not
+        # per-slot rows. Each slot's k/v row for chunk index j lands at
+        # (table[slot, (pos+j)//ps], (pos+j)%ps) — the engine's
+        # prepare_write has already made every written page privately
+        # writable (CoW), so the scatter never touches shared bytes.
+        # Inactive slots (pos < 0), rows past n_valid, and unmapped
+        # table entries route out of bounds; mode="drop" skips them.
+        assert pos_vec, "paged KV cache requires per-slot positions"
         pos = jnp.asarray(cache_pos, jnp.int32)
         n_pages, page_sz = cache["k"].shape[0], cache["k"].shape[1]
         bidx = jnp.arange(pos.shape[0])
-        pj = jnp.where(pos < 0, 0, pos // page_sz)
-        phys = kv_table[bidx, pj]
-        phys = jnp.where((pos < 0) | (phys < 0), n_pages, phys)
-        off = pos % page_sz
+        wpos = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None]  # (B,T)
+        drop = pos[:, None] < 0
+        if n_valid is not None:
+            drop |= jnp.arange(t)[None] >= jnp.asarray(n_valid,
+                                                       jnp.int32)[:, None]
+        pj = jnp.where(drop, 0, wpos // page_sz)
+        phys = kv_table[bidx[:, None], pj]
+        phys = jnp.where(drop | (phys < 0), n_pages, phys)
+        off = wpos % page_sz
         new_cache = dict(cache)
         if "ks" in cache:
             # int8 pages: quantize at page-write; the kernel dequantizes
             # on the f32 accumulator. Scale planes are (P, Hkv, ps) so a
             # page's scales sit lane-contiguous next to its rows.
-            kq, ksc = _prec.quantize_kv(k[:, 0])
-            vq, vsc = _prec.quantize_kv(v[:, 0])
+            kq, ksc = _prec.quantize_kv(k)
+            vq, vsc = _prec.quantize_kv(v)
             new_cache["k"] = cache["k"].at[phys, off].set(kq, mode="drop")
             new_cache["v"] = cache["v"].at[phys, off].set(vq, mode="drop")
             new_cache["ks"] = cache["ks"].at[phys, :, off].set(
@@ -370,36 +379,72 @@ def attn_apply(
                 vsc, mode="drop")
         else:
             new_cache["k"] = cache["k"].at[phys, off].set(
-                k[:, 0].astype(cache["k"].dtype), mode="drop")
+                k.astype(cache["k"].dtype), mode="drop")
             new_cache["v"] = cache["v"].at[phys, off].set(
-                v[:, 0].astype(cache["v"].dtype), mode="drop")
-        # Only pallas/xla have a paged gather; other backends reroute to
-        # the dense XLA oracle (same math through paged_gather_ref).
-        pol_r = pol if pol.backend in ("pallas", "xla") \
-            else pol.replace(backend="xla")
-        out = kops.flash_decode_paged(
-            q, new_cache["k"], new_cache["v"], kv_table, pos=pos,
-            window=cfg.window, ks=new_cache.get("ks"),
-            vs=new_cache.get("vs"), policy=pol_r)
+                v.astype(cache["v"].dtype), mode="drop")
+        if t == 1:
+            # Only pallas/xla have a paged gather; other backends
+            # reroute to the dense XLA oracle (paged_gather_ref math).
+            pol_r = pol if pol.backend in ("pallas", "xla") \
+                else pol.replace(backend="xla")
+            out = kops.flash_decode_paged(
+                q, new_cache["k"], new_cache["v"], kv_table, pos=pos,
+                window=cfg.window, ks=new_cache.get("ks"),
+                vs=new_cache.get("vs"), policy=pol_r)
+        else:
+            # Multi-token verify (speculative decoding): gather each
+            # slot's pages into a dense per-slot view (dequantizing int8
+            # pages) and run the chunked masked path — exactly the dense
+            # composition the paged kernel conformance-tests against.
+            # The gather materializes (B, Tmax) rows once per verify
+            # round; a paged multi-query kernel is the TPU follow-up.
+            tclamp = jnp.maximum(kv_table, 0)
+            kd = new_cache["k"][tclamp]       # (B, Ps, ps, Hkv, Dh)
+            vd = new_cache["v"][tclamp]
+            if "ks" in cache:
+                ks = new_cache["ks"][tclamp].transpose(0, 1, 3, 2)
+                vs = new_cache["vs"][tclamp].transpose(0, 1, 3, 2)
+                kd = kd.astype(jnp.float32) * ks[..., None]
+                vd = vd.astype(jnp.float32) * vs[..., None]
+            b_, ps_ = tclamp.shape
+            kd = kd.reshape(b_, ps_ * page_sz, cfg.n_kv_heads, dh)
+            vd = vd.reshape(b_, ps_ * page_sz, cfg.n_kv_heads, dh)
+            nv = jnp.asarray(t if n_valid is None else n_valid, jnp.int32)
+            kv_len = jnp.where(pos < 0, 0, pos + nv)
+            # pool width Ps*ps need not divide attn_chunk; page_sz does.
+            ch = cfg.attn_chunk \
+                if (ps_ * page_sz) % min(cfg.attn_chunk, ps_ * page_sz) == 0 \
+                else page_sz
+            out = attend(q, kd.astype(io_dtype), vd.astype(io_dtype),
+                         causal=True, window=cfg.window,
+                         chunk=ch, q_offset=pos,
+                         kv_len=kv_len, io_dtype=io_dtype, policy=pol)
     elif cache is not None and pos_vec:
-        # Continuous-batching decode: each slot scatters its single k/v
-        # row at its own position — O(B) rows written, not O(cache).
-        # pos < 0 (inactive slot) maps out of bounds and mode="drop"
-        # skips the write entirely.
-        assert t == 1, "per-slot cache_pos vector requires one-token steps"
+        # Continuous-batching decode (t == 1) or speculative verify
+        # (t == k+1): each slot scatters its k/v rows at its own
+        # positions — O(B*t) rows written, not O(cache). pos < 0
+        # (inactive slot) and rows past n_valid map out of bounds and
+        # mode="drop" skips the write entirely.
         pos = jnp.asarray(cache_pos, jnp.int32)
         bidx = jnp.arange(pos.shape[0])
-        widx = jnp.where(pos < 0, cache["k"].shape[1], pos)
-        ck = cache["k"].at[bidx, widx].set(
-            k[:, 0].astype(cache["k"].dtype), mode="drop")
-        cv = cache["v"].at[bidx, widx].set(
-            v[:, 0].astype(cache["v"].dtype), mode="drop")
+        wpos = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None]  # (B,T)
+        drop = pos[:, None] < 0
+        if n_valid is not None:
+            drop |= jnp.arange(t)[None] >= jnp.asarray(n_valid,
+                                                       jnp.int32)[:, None]
+        widx = jnp.where(drop, cache["k"].shape[1], wpos)
+        ck = cache["k"].at[bidx[:, None], widx].set(
+            k.astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[bidx[:, None], widx].set(
+            v.astype(cache["v"].dtype), mode="drop")
         new_cache = {"k": ck, "v": cv}
+        nv = jnp.asarray(t if n_valid is None else n_valid, jnp.int32)
+        kv_len = jnp.where(pos < 0, 0, pos + nv) if t > 1 else pos + 1
         # Per-row masks subsume the SWA fast path (window via mask).
         out = attend(q, ck, cv, causal=True, window=cfg.window,
                      chunk=cfg.attn_chunk, q_offset=pos,
-                     kv_len=pos + 1, io_dtype=io_dtype,
-                     policy=pol, decode=True)
+                     kv_len=kv_len, io_dtype=io_dtype,
+                     policy=pol, decode=(t == 1))
     elif cache is not None:
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
                                                  k.astype(cache["k"].dtype),

@@ -334,6 +334,48 @@ def decode_step(cfg, params, token, pos, cache):
     return _logits(cfg, params, x), cache
 
 
+def verify_step(cfg, params, tokens, pos, n_tok, cache):
+    """Speculative-verification step: one batched multi-token forward.
+
+    tokens: (B, T) int32 — per slot, the pending token followed by the
+    draft proposals; pos: (B,) per-slot write position of tokens[:, 0]
+    (pos < 0 = inactive slot); n_tok: (B,) count of valid rows per slot
+    (rows past n_tok neither write KV nor attend — slots nearing their
+    generation budget propose fewer than T-1 drafts).
+
+    Returns (logits (B, T, V), cache). logits[:, j] is the target
+    distribution for stream position pos + j + 1, so row j-1 scores
+    draft token j and row n_tok-1 supplies the bonus token. This is a
+    prefill-shaped call (all T positions in one GEMM pass over the
+    tuned kernel stack), NOT T decode steps — the whole point of
+    speculative decoding under the paper's batching thesis.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"speculative verification supports dense/moe/vlm, not {fam!r}")
+    pos = jnp.asarray(pos, jnp.int32)
+    n_tok = jnp.asarray(n_tok, jnp.int32)
+    batch = {"tokens": tokens}
+    if fam == "vlm" and cfg.mrope_sections:
+        b, t = tokens.shape
+        wpos = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
+        batch["positions"] = jnp.broadcast_to(wpos[..., None], (b, t, 3))
+    x = _embed_inputs(cfg, params, batch)
+    if isinstance(cache, dict) and "pages" in cache:
+        x, pages, _ = T.stack_apply(params["layers"], x, cfg,
+                                    positions=batch.get("positions"),
+                                    caches=cache["pages"], cache_pos=pos,
+                                    kv_table=cache["table"], n_valid=n_tok)
+        cache = {"pages": pages, "table": cache["table"]}
+    else:
+        x, cache, _ = T.stack_apply(params["layers"], x, cfg,
+                                    positions=batch.get("positions"),
+                                    caches=cache, cache_pos=pos,
+                                    n_valid=n_tok)
+    return _logits(cfg, params, x), cache
+
+
 def _sinusoid_at(d: int, pos) -> jnp.ndarray:
     """Sinusoid row(s) at `pos` (scalar -> (d,), vector (B,) -> (B, d))."""
     div = jnp.exp(-jnp.log(10_000.0) * jnp.arange(0, d, 2) / d)

@@ -79,12 +79,12 @@ def block_init(key, cfg, *, cross: bool = False):
 
 def block_apply(p, x, cfg, *, positions=None, causal=True, cache=None,
                 cache_pos=None, enc_out=None, cross_cache=None,
-                kv_table=None):
+                kv_table=None, n_valid=None):
     """Returns (x, new_cache, aux)."""
     h, new_cache = A.attn_apply(
         p["attn"], _norm_apply(cfg, p["attn_norm"], x), cfg,
         positions=positions, causal=causal, cache=cache, cache_pos=cache_pos,
-        kv_table=kv_table)
+        kv_table=kv_table, n_valid=n_valid)
     x = x + h
     if enc_out is not None or cross_cache is not None:
         if cross_cache is not None:
@@ -122,12 +122,14 @@ def stack_init(key, cfg, *, n_layers=None, cross=False):
 
 def stack_apply(params, x, cfg, *, positions=None, causal=True,
                 caches=None, cache_pos=None, enc_out=None,
-                cross_caches=None, kv_table=None):
+                cross_caches=None, kv_table=None, n_valid=None):
     """caches / cross_caches carry a leading layer dim when scanning.
 
     kv_table (paged decode) is closed over rather than scanned: one
     logical page is the same physical index in every layer's pool, so
-    the table has no layer dim to carry as an xs.
+    the table has no layer dim to carry as an xs. n_valid (per-row valid
+    token count, speculative verify) is likewise layer-less and closed
+    over.
 
     Returns (x, new_caches, aux_sum).
     """
@@ -137,7 +139,7 @@ def stack_apply(params, x, cfg, *, positions=None, causal=True,
         xo, new_cache, aux = block_apply(
             lp, xc, cfg, positions=positions, causal=causal, cache=cache,
             cache_pos=cache_pos, enc_out=enc_out, cross_cache=ccache,
-            kv_table=kv_table)
+            kv_table=kv_table, n_valid=n_valid)
         aux_sum = {k: aux_sum.get(k, 0.0) + v for k, v in aux.items()} \
             if aux else aux_sum
         return (xo, aux_sum), new_cache

@@ -8,17 +8,20 @@
                   deadline expiry, preemption requeue
     kv_pool.py    paged KV layout: page pool + per-slot page tables,
                   content-hashed prefix sharing, copy-on-write
-    sampler.py    greedy / temperature / top-k token selection
+    sampler.py    greedy / temperature / top-k token selection, plus
+                  the speculative leftover/residual acceptance rule
+    spec.py       speculative decoding draft side: per-slot draft KV
+                  state, masked draft rounds, positional rollback
     request.py    dataclasses + per-request stats
-    workload.py   synthetic arrival-trace generators (mixed-length +
-                  prefix-heavy chat; optional deadlines, priorities,
-                  bursty arrivals)
+    workload.py   synthetic arrival-trace scenario registry (mixed,
+                  prefix_heavy, bursty compound-Poisson, long_context;
+                  optional deadlines, priorities, bursty arrivals)
     faults.py     deterministic chaos injector (NaN rows, page
                   corruption, kernel faults, slow steps, forced pool
                   exhaustion) scripted by step counts
 
-See docs/ARCHITECTURE.md §Serving engine, §Paged KV cache and §Fault
-tolerance for the layer maps.
+See docs/ARCHITECTURE.md §Serving engine, §Paged KV cache, §Fault
+tolerance and §Speculative decoding for the layer maps.
 """
 
 from repro.serving.engine import (DEFAULT_PAGE_SIZE, DEFAULT_PREFILL_CHUNK,
@@ -27,16 +30,21 @@ from repro.serving.faults import FaultInjector, SimulatedKernelFault
 from repro.serving.kv_pool import (AdmitPlan, KVPagePool, KVPoolExhausted,
                                    PageWrite)
 from repro.serving.request import Request, percentile
-from repro.serving.sampler import Sampler, SamplerConfig, make_sampler
+from repro.serving.sampler import (Sampler, SamplerConfig, make_sampler,
+                                   residual_distribution)
 from repro.serving.scheduler import SlotScheduler
-from repro.serving.workload import (TraceItem, prefix_heavy_trace,
-                                    synthetic_trace)
+from repro.serving.spec import SpecDecoder
+from repro.serving.workload import (TRACES, TraceItem, bursty_trace,
+                                    long_context_trace, make_trace,
+                                    prefix_heavy_trace, synthetic_trace)
 
 __all__ = [
     "AdmitPlan", "DEFAULT_PAGE_SIZE", "DEFAULT_PREFILL_CHUNK",
     "FaultInjector", "KVPagePool", "KVPoolExhausted", "PageWrite",
-    "ServingEngine", "SimulatedKernelFault",
+    "ServingEngine", "SimulatedKernelFault", "SpecDecoder",
     "Request", "percentile",
-    "Sampler", "SamplerConfig", "make_sampler", "SlotScheduler",
-    "TraceItem", "prefix_heavy_trace", "synthetic_trace",
+    "Sampler", "SamplerConfig", "make_sampler", "residual_distribution",
+    "SlotScheduler",
+    "TRACES", "TraceItem", "bursty_trace", "long_context_trace",
+    "make_trace", "prefix_heavy_trace", "synthetic_trace",
 ]

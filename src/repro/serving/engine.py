@@ -92,6 +92,7 @@ from repro.serving.request import (ACTIVE, CANCELLED, FINISHED, QUARANTINED,
                                    TERMINAL, WAITING, Request, percentile)
 from repro.serving.sampler import Sampler
 from repro.serving.scheduler import SlotScheduler
+from repro.serving.spec import SpecDecoder
 from repro.training import train_loop as TL
 
 #: Default tokens per KV page in paged mode. 16 rows keeps a page's K
@@ -135,7 +136,10 @@ class ServingEngine:
                  preempt_retry_budget: int = 2,
                  preempt_backoff: float = 0.02,
                  kernel_fault_threshold: int = 2,
-                 max_step_retries: int = 2):
+                 max_step_retries: int = 2,
+                 draft=None, spec_k: int = 4,
+                 draft_policy=None,
+                 draft_sampler: Optional[Sampler] = None):
         self.cfg = cfg
         # Execution policy for every jitted step this engine compiles —
         # captured once at construction (explicit arg > ambient default)
@@ -212,6 +216,44 @@ class ServingEngine:
                 for (path, b), s in zip(flat, jax.tree.leaves(small))]
             self._write = jax.jit(self._write_slot, donate_argnums=(0,))
 
+        # -- speculative decoding (serving.spec) ------------------------
+        # draft=(draft_cfg, draft_params) turns every decode step into a
+        # draft round (spec_k cheap draft steps) plus ONE batched target
+        # verification over all k+1 positions (model.verify_step); the
+        # leftover/residual acceptance rule keeps the emitted stream
+        # distribution-identical — token-exact under greedy sampling.
+        self.spec: Optional[SpecDecoder] = None
+        self.spec_k = spec_k
+        self.spec_rounds = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        if draft is not None:
+            if cfg.family not in ("dense", "moe", "vlm"):
+                raise ValueError(
+                    f"speculative decoding needs a verify-capable target "
+                    f"(dense/moe/vlm), not {cfg.family!r}")
+            if fault_injector is not None:
+                raise ValueError(
+                    "speculative decoding and the chaos injector are "
+                    "mutually exclusive: the injector's step hooks assume "
+                    "one token per slot per step")
+            draft_cfg, draft_params = draft
+            if draft_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab} != target vocab "
+                    f"{cfg.vocab}: acceptance compares distributions "
+                    f"over the same token space")
+            # The draft runs under its own policy (default: the target's,
+            # forced dense-KV — positional rollback needs no pages); a
+            # different quant/backend keeps its tuning cache separate via
+            # the policy fingerprint.
+            dpol = _pol.resolve(draft_policy) if draft_policy is not None \
+                else self.policy.replace(kv_layout="dense", quant_kv="off")
+            self.spec = SpecDecoder(
+                draft_cfg, draft_params, max_slots=max_slots,
+                max_len=self.max_len, spec_k=spec_k, policy=dpol,
+                sampler=draft_sampler, prefill_chunk=self.prefill_chunk)
+
         self._build_steps()
 
         # per-slot device-mirrored state (pos < 0 = inactive slot)
@@ -249,6 +291,10 @@ class ServingEngine:
         self._step = jax.jit(TL.make_serve_step(self.cfg,
                                                 policy=self.policy),
                              donate_argnums=(3,))
+        if self.spec is not None:
+            self._vstep = jax.jit(TL.make_verify_step(self.cfg,
+                                                      policy=self.policy),
+                                  donate_argnums=(4,))
 
     # -- cache slot copy ----------------------------------------------
     def _write_slot(self, cache, sub, slot):
@@ -413,6 +459,12 @@ class ServingEngine:
         else:
             self._pos[slot] = L
             self._tokens[slot, 0] = tok
+            if self.spec is not None:
+                # Fill the draft cache with the same context (rows
+                # 0..L-1); the first draft round then feeds the pending
+                # token at L. Resumes pass the fuller context through
+                # here too (recompute-on-resume covers both caches).
+                self.spec.admit(slot, ctx)
 
     def _done(self, req: Request, tok: int) -> bool:
         return (req.n_generated >= req.max_new_tokens
@@ -603,6 +655,93 @@ class ServingEngine:
                 self._pos[slot] += 1
                 self._tokens[slot, 0] = tok
 
+    # -- speculative decode (draft round + ONE batched verification) ----
+    def _spec_decode_once(self) -> None:
+        """One speculative round: spec_k draft steps propose tokens for
+        every active slot, then the TARGET model scores all k+1
+        positions (pending + drafts) in ONE prefill-shaped verify_step —
+        batched verification is the whole subsystem's point; the per-
+        round target cost is one multi-token forward, never k decode
+        steps. Acceptance (sampler.speculative_accept) emits 1..k+1
+        tokens per slot; the target/draft caches need no rollback work
+        because rollback is positional (see serving/spec.py docstring):
+        rows past each slot's new pending position are stale but masked,
+        and the next round overwrites them before they could be read."""
+        active = self.scheduler.active
+        if not active:
+            raise ValueError("decode step with no active slots")
+        step_idx = self.decode_steps
+        k = self.spec_k
+        k_vec = np.zeros(self.max_slots, np.int32)
+        for slot, req in active.items():
+            # a slot about to hit its budget proposes fewer drafts —
+            # tokens past max_new would be drafted only to be dropped
+            k_vec[slot] = min(k, req.remaining_tokens - 1)
+        t0 = time.perf_counter()
+        drafts, qprobs = self.spec.draft_round(self._tokens, self._pos,
+                                               k_vec)
+        vtokens = np.zeros((self.max_slots, k + 1), np.int32)
+        vtokens[:, 0] = self._tokens[:, 0]
+        vtokens[:, 1:] = drafts
+        n_tok = np.where(self._pos >= 0, k_vec + 1, 0).astype(np.int32)
+        if self.pool is not None:
+            # every position the verify scatter may write must be
+            # privately owned first; the admission reservation covers
+            # the full range (max write pos + k_vec stays short of the
+            # reserved last page), so this never fails mid-stream.
+            for slot in active:
+                p0 = int(self._pos[slot])
+                ps = self.page_size
+                for j in range(p0 // ps, (p0 + int(n_tok[slot]) - 1) // ps + 1):
+                    w = self.pool.prepare_write(slot, j * ps)
+                    if w is not None and w.kind == "cow":
+                        self.cache = self._copy_pg(
+                            self.cache, jnp.int32(w.src), jnp.int32(w.dst))
+            self._sync_table()
+        logits, self.cache = self._vstep(
+            self.params, jnp.asarray(vtokens), jnp.asarray(self._pos),
+            jnp.asarray(n_tok), self.cache)
+        rows = np.asarray(logits)[:, :, :self.cfg.vocab]    # sync point
+        dt = time.perf_counter() - t0
+        self.decode_time += dt
+        self._step_times.append(dt)
+        self.straggler.observe(step_idx, dt)
+        self.decode_steps += 1
+        self.spec_rounds += 1
+        self.decode_slot_steps += len(active)
+        self.peak_occupancy = max(self.peak_occupancy, len(active))
+        now = self._now()
+        for slot in sorted(active):
+            req = active[slot]
+            nt = int(n_tok[slot])
+            if not np.isfinite(rows[slot, :nt]).all():
+                req.error = f"non-finite logits at decode step {step_idx}"
+                self.quarantined += 1
+                self._release(req, slot, QUARANTINED, now)
+                continue
+            kk = nt - 1
+            emitted, n_acc = self.sampler.speculative_accept(
+                rows[slot, :nt], drafts[slot, :kk],
+                None if qprobs is None else qprobs[slot, :kk])
+            req.draft_proposed += kk
+            req.draft_accepted += n_acc
+            self.spec_proposed += kk
+            self.spec_accepted += n_acc
+            n_cons = 0
+            finished = False
+            for tok in emitted:
+                req.generated.append(tok)
+                self.tokens_emitted += 1
+                n_cons += 1
+                if self._done(req, tok):   # eos truncates mid-round
+                    finished = True
+                    break
+            if finished:
+                self._finish(req, slot, now)
+            else:
+                self._pos[slot] += n_cons
+                self._tokens[slot, 0] = emitted[n_cons - 1]
+
     # -- driving -------------------------------------------------------
     def step(self) -> bool:
         """Drop expired waiters, admit every ready request (preempting
@@ -629,7 +768,10 @@ class ServingEngine:
                     break   # head waits for pages to free
             self._admit(req)
         if self.scheduler.n_active:
-            self._decode_once()
+            if self.spec is not None:
+                self._spec_decode_once()
+            else:
+                self._decode_once()
         return self.scheduler.has_work()
 
     def run(self, *, idle_sleep: float = 1e-3) -> Dict[str, Any]:
@@ -664,14 +806,15 @@ class ServingEngine:
         deadlined = [r for r in self.requests
                      if r.deadline is not None and r.status in TERMINAL]
         missed = [r for r in deadlined if r.missed_deadline]
+        decode_tokens = self.tokens_emitted - len(
+            [r for r in self.requests if r.t_first_token is not None])
         out = {
             "n_requests": len(self.requests),
             "n_finished": len(done),
             "prefill_tokens": self.prefill_tokens,
             "prefill_tok_s": self.prefill_tokens / max(self.prefill_time,
                                                        1e-9),
-            "decode_tokens": self.tokens_emitted - len(
-                [r for r in self.requests if r.t_first_token is not None]),
+            "decode_tokens": decode_tokens,
             "decode_steps": self.decode_steps,
             "decode_tok_s": (self.decode_slot_steps
                              / max(self.decode_time, 1e-9)),
@@ -699,7 +842,19 @@ class ServingEngine:
             "goodput": useful / max(self.tokens_emitted, 1),
             "deadline_miss_rate": (len(missed) / len(deadlined)
                                    if deadlined else float("nan")),
+            # tokens emitted per slot-step: exactly 1.0 for plain
+            # decode (minus quarantines), > 1.0 when speculation pays
+            "tokens_per_step": decode_tokens / max(self.decode_slot_steps,
+                                                   1),
         }
+        if self.spec is not None:
+            out["spec_rounds"] = self.spec_rounds
+            out["spec_proposed"] = self.spec_proposed
+            out["spec_accepted"] = self.spec_accepted
+            out["spec_acceptance_rate"] = (self.spec_accepted
+                                           / max(self.spec_proposed, 1))
+            out["draft_time_s"] = self.spec.draft_time
+            out["draft_prefill_time_s"] = self.spec.prefill_time
         if self.injector is not None:
             out["faults_injected"] = self.injector.report()
         if self.pool is not None:

@@ -62,6 +62,16 @@ class Request:
     preemptions: int = 0               # times this request lost its slot
     resume_at: float = 0.0             # earliest re-admission (backoff)
     error: Optional[str] = None        # diagnostic for quarantined/failed
+    draft_proposed: int = 0            # speculative tokens proposed for
+    draft_accepted: int = 0            # ... / accepted on this request
+
+    @property
+    def acceptance_rate(self) -> Optional[float]:
+        """Fraction of draft proposals the target accepted (None when
+        the engine ran without speculation)."""
+        if self.draft_proposed == 0:
+            return None
+        return self.draft_accepted / self.draft_proposed
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

@@ -1,0 +1,210 @@
+"""Speculative decoding: the draft half of the draft/verify engine.
+
+Sequential one-token decode is the last serialized hot path in the
+serving engine — every emitted token costs one full target-model pass
+whose GEMMs are too thin to saturate the device. Speculative decoding
+restructures that work the way the paper restructures everything else:
+a cheap draft model proposes ``k`` tokens autoregressively, then the
+target model scores all ``k+1`` positions in ONE prefill-shaped forward
+(``model.verify_step``) that rides the tuned/fused/quantized kernel
+stack at real arithmetic intensity. The standard leftover/residual
+acceptance rule (``sampler.Sampler.speculative_accept``) keeps the
+emitted stream distribution-identical to decoding the target alone —
+and token-exact for greedy sampling, which is what the differential
+tests pin.
+
+``SpecDecoder`` owns everything draft-side:
+
+* the draft model's config/params under its OWN execution policy (the
+  draft may run int8 weights while the target serves dense — policy
+  fingerprints keep their tuning caches separate for free). Draft KV
+  state is always a DENSE per-slot cache: rollback then needs no page
+  bookkeeping at all, because rollback is purely positional (below).
+* per-slot admission prefill (same bucketing as the engine's) filling
+  the draft cache with the slot's context, and
+* ``draft_round``: ``spec_k + 1`` masked one-token draft steps over all
+  slots that propose the draft tokens AND keep the draft cache's rows
+  aligned with every acceptance outcome in advance.
+
+Rollback is positional, not transactional. A round at position ``pos``
+feeds (pending, d_1 .. d_k) at ``pos .. pos+k``, so draft rows
+``pos .. pos+a`` hold exactly the tokens the target accepted for ANY
+acceptance count ``a`` — the rows past the new pending position are
+stale, but stale rows are (1) never attended, because each step masks
+``kv_len = pos + 1`` at its own depth, and (2) always overwritten
+before they could become valid, because the next round's feeds start at
+the new pending position. The engine's target cache relies on the same
+invariant after a rejection (verify wrote k+1 rows, fewer were
+consumed), and on preemption the resume path re-prefills both caches
+from the request's full context (recompute-on-resume, PR 8).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as _pol
+from repro.models import model as M
+from repro.serving.sampler import Sampler
+from repro.training import train_loop as TL
+
+__all__ = ["SpecDecoder"]
+
+
+class SpecDecoder:
+    """Draft-model runner for speculative decoding.
+
+    Parameters
+    ----------
+    cfg, params:    the DRAFT model (any dense/moe/vlm config whose
+                    vocab matches the target's).
+    max_slots:      must equal the engine's slot count (shared slot ids).
+    max_len:        the engine's (already rounded) max_len; the draft
+                    cache adds ``spec_k`` rows of headroom because a
+                    round writes up to ``pos + spec_k``.
+    spec_k:         draft tokens proposed per round.
+    policy:         draft execution policy. kv_layout must be "dense" —
+                    the draft cache is per-slot rows by design (see
+                    module docstring); quant="int8" weights are fine.
+    sampler:        draft proposal sampler (default greedy — a greedy
+                    draft is a valid ``q`` under ANY target sampler:
+                    its distribution is the delta at the argmax).
+    """
+
+    def __init__(self, cfg, params, *, max_slots: int, max_len: int,
+                 spec_k: int = 4, policy=None,
+                 sampler: Optional[Sampler] = None,
+                 prefill_chunk: int = 8):
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"draft model must be an attention-cache family "
+                f"(dense/moe/vlm), not {cfg.family!r}")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.cfg = cfg
+        self.policy = _pol.resolve(policy)
+        if self.policy.kv_layout != "dense":
+            raise ValueError(
+                "the draft KV cache is dense by design (positional "
+                "rollback needs no page bookkeeping); pass a draft "
+                "policy with kv_layout='dense'")
+        if self.policy.quant == "int8":
+            params = M.quantize_params(params)
+        self.params = params
+        self.spec_k = spec_k
+        self.max_slots = max_slots
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.sampler = sampler or Sampler()
+        # headroom: a round writes rows pos .. pos+spec_k; chunked
+        # attention wants lengths beyond attn_chunk to be multiples.
+        a = cfg.attn_chunk
+        ml = max_len + spec_k
+        if ml > a and ml % a:
+            ml += a - ml % a
+        self.max_len = ml
+
+        self.cache = M.init_cache(cfg, max_slots, ml)
+        flat, self._treedef = jax.tree_util.tree_flatten_with_path(
+            self.cache)
+        small = M.init_cache(cfg, 1, ml)
+        from repro.serving.engine import _slot_axis
+        self._slot_axes = [
+            _slot_axis(b.shape, s.shape, name=jax.tree_util.keystr(path))
+            for (path, b), s in zip(flat, jax.tree.leaves(small))]
+        self._write = jax.jit(self._write_slot, donate_argnums=(0,))
+        self._prefill = jax.jit(TL.make_prefill(cfg, policy=self.policy),
+                                donate_argnums=(2,))
+        self._step = jax.jit(TL.make_serve_step(cfg, policy=self.policy),
+                             donate_argnums=(3,))
+        self.draft_time = 0.0          # seconds inside draft rounds
+        self.prefill_time = 0.0        # seconds inside draft admission
+
+    # -- cache plumbing (the engine's dense-slot copy, draft-side) ------
+    def _write_slot(self, cache, sub, slot):
+        leaves = jax.tree.leaves(cache)
+        subs = jax.tree.leaves(sub)
+        out = []
+        for leaf, s, ax in zip(leaves, subs, self._slot_axes):
+            if ax is None:
+                out.append(s.astype(leaf.dtype))
+                continue
+            start = [0] * leaf.ndim
+            start[ax] = slot
+            out.append(jax.lax.dynamic_update_slice(
+                leaf, s.astype(leaf.dtype), tuple(start)))
+        return jax.tree.unflatten(self._treedef, out)
+
+    # -- admission ------------------------------------------------------
+    def admit(self, slot: int, ctx: np.ndarray) -> None:
+        """Prefill the slot's context into the draft cache (rows
+        0..len(ctx)-1). Same bucketed batch-1 prefill as the engine's
+        admission, so mixed prompt lengths stay on a bounded compile
+        count. Called on every (re-)admission — a resumed request's
+        fuller context simply overwrites the stale rows."""
+        ctx = np.asarray(ctx, np.int32).reshape(-1)
+        L = len(ctx)
+        t0 = time.perf_counter()
+        chunk = self.prefill_chunk
+        lb = L - (L % chunk) or L
+        batch = {"tokens": jnp.asarray(ctx[None, :lb])}
+        sub = M.init_cache(self.cfg, 1, self.max_len)
+        _, sub = self._prefill(self.params, batch, sub)
+        for i in range(lb, L):         # remainder: one-token steps
+            _, sub = self._step(self.params, jnp.asarray(ctx[None, None, i]),
+                                jnp.int32(i), sub)
+        self.cache = self._write(self.cache, sub, slot)
+        self.prefill_time += time.perf_counter() - t0
+
+    # -- the draft round ------------------------------------------------
+    def draft_round(self, tokens: np.ndarray, pos: np.ndarray,
+                    k_vec: np.ndarray):
+        """Propose up to ``k_vec[s]`` draft tokens per slot.
+
+        tokens: (S, 1) pending token per slot; pos: (S,) its position
+        (< 0 = inactive slot); k_vec: (S,) draft count per slot (a slot
+        near its generation budget proposes fewer than spec_k).
+
+        Runs ``spec_k + 1`` one-token draft steps — step i feeds the
+        last token (pending for i=0, else d_i) at ``pos + i`` for every
+        slot with ``i <= k_vec[s]``, masked to pos = -1 elsewhere. The
+        one-past-the-last feed writes d_k's own KV row so a fully
+        accepted round leaves the draft cache complete up to the bonus
+        token's position (no post-hoc fixup, no dpos bookkeeping).
+
+        Returns (drafts (S, spec_k) int32, qprobs) where qprobs is
+        (S, spec_k, vocab) draft distributions for a stochastic draft
+        sampler, or None for a deterministic (greedy) one.
+        """
+        pos = np.asarray(pos, np.int32)
+        k_vec = np.asarray(k_vec, np.int32)
+        s_n = pos.shape[0]
+        k = self.spec_k
+        drafts = np.zeros((s_n, k), np.int32)
+        qprobs = None
+        if self.sampler.config.kind != "greedy":
+            qprobs = np.zeros((s_n, k, self.cfg.vocab), np.float64)
+        cur = np.array(tokens, np.int32).reshape(s_n, 1)
+        t0 = time.perf_counter()
+        for i in range(k + 1):
+            pos_i = np.where((pos >= 0) & (i <= k_vec),
+                             pos + i, -1).astype(np.int32)
+            logits, self.cache = self._step(
+                self.params, jnp.asarray(cur), jnp.asarray(pos_i),
+                self.cache)
+            if i == k:
+                break                  # final feed is KV-write only
+            rows = np.asarray(logits)[:, -1, :self.cfg.vocab]
+            for s in range(s_n):
+                if pos[s] >= 0 and i < k_vec[s]:
+                    tok = self.sampler(rows[s])
+                    drafts[s, i] = tok
+                    if qprobs is not None:
+                        qprobs[s, i] = self.sampler.probs(rows[s])
+                    cur[s, 0] = tok
+        self.draft_time += time.perf_counter() - t0
+        return drafts, qprobs

@@ -1,34 +1,41 @@
-"""Synthetic workload generators.
+"""Synthetic workload generators — a registry of serving scenarios.
 
 Trace builders shared by the serving CLI (launch/serve.py) and the
 serving benchmark (benchmarks/bench_serving.py) so "the same trace
-parameters" always mean the same workload:
+parameters" always mean the same workload. All scenarios share one
+body (`_make_trace`: arrivals, priorities, deadlines, encdec frames)
+and differ only in how each request's prompt and generation budget are
+drawn; the ``TRACES`` registry keys them by name so the CLI's
+``--workload`` flag and the benchmark's per-scenario table resolve
+through a single source of truth:
 
-* synthetic_trace — mixed-length: prompt lengths uniform over an
-  INCLUSIVE [lo, hi] range, arrivals Poisson at `arrival_rate` req/s
-  (0 = burst, everything at t=0), random-token prompts, and — for
-  encdec archs — a synthetic encoder-frame block per request.
-* prefix_heavy_trace — chat-shaped: every request opens with the SAME
-  `prefix_len`-token system prompt followed by a short random suffix.
-  This is the workload where the paged KV cache's prefix sharing pays:
-  N requests pin one copy of the prefix pages instead of N.
+* ``mixed`` (synthetic_trace) — prompt lengths uniform over an
+  INCLUSIVE [lo, hi] range, random tokens. The uniform baseline.
+* ``prefix_heavy`` (prefix_heavy_trace) — chat-shaped: every request
+  opens with the SAME `prefix_len`-token system prompt plus a short
+  random suffix. Where paged prefix sharing pays — and where a draft
+  model's proposals track the target best (speculation wins here).
+* ``bursty`` (bursty_trace) — compound Poisson arrivals: group sizes
+  are 1 + Poisson(burst_mean - 1), groups land simultaneously with
+  exponential gaps scaled to preserve the long-run request rate. The
+  pool-exhaustion / preemption stress a smooth trace never produces.
+* ``long_context`` (long_context_trace) — long prompts, short
+  generations: prefill-bound traffic where decode-side wins (paging,
+  speculation) matter least and admission latency dominates.
 
-Both traces optionally carry per-request fault-tolerance fields:
-
-* ``deadline`` (relative seconds after arrival — the TraceItem stores
-  the ABSOLUTE engine-clock deadline, ready for ``engine.submit``) and
-  ``priority_levels`` (uniform choice per request; higher outranks
-  lower in the engine's preemption victim selection).
-* ``burst_size > 1`` switches the arrival process to bursty: requests
-  arrive in groups of `burst_size` that hit the engine simultaneously,
-  with exponential gaps between groups scaled so the long-run rate
-  still equals `arrival_rate` — the pool-exhaustion worst case that a
-  smooth Poisson trace never produces.
+Every scenario optionally carries per-request fault-tolerance fields:
+``deadline`` (relative seconds after arrival — the TraceItem stores the
+ABSOLUTE engine-clock deadline, ready for ``engine.submit``) and
+``priority_levels`` (uniform choice per request; higher outranks lower
+in the engine's preemption victim selection). ``burst_size > 1`` on the
+fixed-size-burst scenarios groups arrivals the same way older revisions
+did (kept for the chaos suite's worst cases).
 """
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, \
+    Tuple
 
 import numpy as np
 
@@ -58,6 +65,26 @@ def _arrivals(rng: np.random.Generator, n: int, arrival_rate: float,
     return np.repeat(times, burst_size)[:n]
 
 
+def _compound_arrivals(rng: np.random.Generator, n: int,
+                       arrival_rate: float, burst_mean: float) -> np.ndarray:
+    """Compound Poisson arrivals: burst sizes 1 + Poisson(burst_mean-1)
+    (so the mean group size is burst_mean and no group is empty), each
+    group simultaneous, exponential inter-group gaps with mean
+    burst_mean / arrival_rate — the long-run REQUEST rate stays
+    `arrival_rate` while the instantaneous load swings."""
+    if burst_mean < 1:
+        raise ValueError(f"burst_mean must be >= 1, got {burst_mean}")
+    if arrival_rate <= 0:
+        return np.zeros(n)
+    out: List[float] = []
+    t = 0.0
+    while len(out) < n:
+        t += float(rng.exponential(burst_mean / arrival_rate))
+        size = 1 + int(rng.poisson(burst_mean - 1.0))
+        out.extend([t] * size)
+    return np.asarray(out[:n])
+
+
 def _priorities(rng: np.random.Generator, n: int,
                 priority_levels: Sequence[int]) -> np.ndarray:
     levels = np.asarray(list(priority_levels), np.int64)
@@ -66,29 +93,46 @@ def _priorities(rng: np.random.Generator, n: int,
     return levels[rng.integers(0, levels.size, n)]
 
 
+def _make_trace(cfg, n: int, rng: np.random.Generator, prompt_fn, gen,
+                *, arrival_rate: float, deadline: Optional[float],
+                priority_levels: Sequence[int], burst_size: int = 1,
+                arrivals: Optional[np.ndarray] = None) -> List[TraceItem]:
+    """The shared trace body: every scenario is `prompt_fn(i) -> prompt`
+    plus a per-request generation budget (int, or `gen(i) -> int`) over
+    common arrival / deadline / priority / encdec-frame machinery."""
+    if arrivals is None:
+        arrivals = _arrivals(rng, n, arrival_rate, burst_size)
+    prios = _priorities(rng, n, priority_levels)
+    gen_fn = gen if callable(gen) else (lambda i: gen)
+    trace: List[TraceItem] = []
+    for i in range(n):
+        prompt = np.asarray(prompt_fn(i), np.int32)
+        enc = None
+        if cfg.family == "encdec":
+            enc = rng.normal(size=(cfg.enc_ctx, cfg.d_model)) \
+                .astype(np.float32)
+        dl = None if deadline is None else float(arrivals[i]) + deadline
+        trace.append(TraceItem(prompt, int(gen_fn(i)), float(arrivals[i]),
+                               enc, dl, int(prios[i])))
+    return trace
+
+
 def synthetic_trace(cfg, n: int, *, rng: np.random.Generator,
                     len_range: Tuple[int, int] = (8, 48), gen: int = 16,
                     arrival_rate: float = 0.0,
                     deadline: Optional[float] = None,
                     priority_levels: Sequence[int] = (0,),
                     burst_size: int = 1) -> List[TraceItem]:
+    """Mixed-length uniform baseline (registry name: "mixed")."""
     lo, hi = len_range
     if not 1 <= lo <= hi:
         raise ValueError(f"bad len_range {len_range}")
     lens = rng.integers(lo, hi + 1, n)
-    arrivals = _arrivals(rng, n, arrival_rate, burst_size)
-    prios = _priorities(rng, n, priority_levels)
-    trace: List[TraceItem] = []
-    for i in range(n):
-        prompt = rng.integers(0, cfg.vocab, int(lens[i])).astype(np.int32)
-        enc = None
-        if cfg.family == "encdec":
-            enc = rng.normal(size=(cfg.enc_ctx, cfg.d_model)) \
-                .astype(np.float32)
-        dl = None if deadline is None else float(arrivals[i]) + deadline
-        trace.append(TraceItem(prompt, gen, float(arrivals[i]), enc,
-                               dl, int(prios[i])))
-    return trace
+    return _make_trace(
+        cfg, n, rng,
+        lambda i: rng.integers(0, cfg.vocab, int(lens[i])), gen,
+        arrival_rate=arrival_rate, deadline=deadline,
+        priority_levels=priority_levels, burst_size=burst_size)
 
 
 def prefix_heavy_trace(cfg, n: int, *, rng: np.random.Generator,
@@ -101,8 +145,7 @@ def prefix_heavy_trace(cfg, n: int, *, rng: np.random.Generator,
                        burst_size: int = 1) -> List[TraceItem]:
     """N requests sharing one `prefix_len`-token system prompt, each
     with a uniform [lo, hi] random-token suffix (hi inclusive; lo may be
-    0 — identical prompts, the copy-on-write worst case). Arrival,
-    deadline and priority models match synthetic_trace."""
+    0 — identical prompts, the copy-on-write worst case)."""
     lo, hi = suffix_range
     if not 0 <= lo <= hi:
         raise ValueError(f"bad suffix_range {suffix_range}")
@@ -110,17 +153,79 @@ def prefix_heavy_trace(cfg, n: int, *, rng: np.random.Generator,
         raise ValueError(f"prefix_len must be >= 1, got {prefix_len}")
     prefix = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
     lens = rng.integers(lo, hi + 1, n)
-    arrivals = _arrivals(rng, n, arrival_rate, burst_size)
-    prios = _priorities(rng, n, priority_levels)
-    trace: List[TraceItem] = []
-    for i in range(n):
-        suffix = rng.integers(0, cfg.vocab, int(lens[i])).astype(np.int32)
-        prompt = np.concatenate([prefix, suffix])
-        enc = None
-        if cfg.family == "encdec":
-            enc = rng.normal(size=(cfg.enc_ctx, cfg.d_model)) \
-                .astype(np.float32)
-        dl = None if deadline is None else float(arrivals[i]) + deadline
-        trace.append(TraceItem(prompt, gen, float(arrivals[i]), enc,
-                               dl, int(prios[i])))
-    return trace
+    return _make_trace(
+        cfg, n, rng,
+        lambda i: np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab, int(lens[i]))
+             .astype(np.int32)]), gen,
+        arrival_rate=arrival_rate, deadline=deadline,
+        priority_levels=priority_levels, burst_size=burst_size)
+
+
+def bursty_trace(cfg, n: int, *, rng: np.random.Generator,
+                 len_range: Tuple[int, int] = (8, 48), gen: int = 16,
+                 arrival_rate: float = 0.0, burst_mean: float = 4.0,
+                 deadline: Optional[float] = None,
+                 priority_levels: Sequence[int] = (0,)) -> List[TraceItem]:
+    """Compound-Poisson arrivals (random group sizes, simultaneous
+    within a group) over mixed-length prompts — the admission-pressure
+    scenario; rate-preserving, so only the VARIANCE differs vs
+    "mixed"."""
+    lo, hi = len_range
+    if not 1 <= lo <= hi:
+        raise ValueError(f"bad len_range {len_range}")
+    lens = rng.integers(lo, hi + 1, n)
+    arrivals = _compound_arrivals(rng, n, arrival_rate, burst_mean)
+    return _make_trace(
+        cfg, n, rng,
+        lambda i: rng.integers(0, cfg.vocab, int(lens[i])), gen,
+        arrival_rate=arrival_rate, deadline=deadline,
+        priority_levels=priority_levels, arrivals=arrivals)
+
+
+def long_context_trace(cfg, n: int, *, rng: np.random.Generator,
+                       len_range: Tuple[int, int] = (96, 160),
+                       gen: int = 4,
+                       arrival_rate: float = 0.0,
+                       deadline: Optional[float] = None,
+                       priority_levels: Sequence[int] = (0,),
+                       burst_size: int = 1) -> List[TraceItem]:
+    """Long prompts, short generations: prefill-bound traffic (summarize
+    / extract shapes). Decode-side machinery matters least here — the
+    scenario exists so per-scenario percentiles show WHERE speculation
+    and paging pay, not just that they do."""
+    lo, hi = len_range
+    if not 1 <= lo <= hi:
+        raise ValueError(f"bad len_range {len_range}")
+    lens = rng.integers(lo, hi + 1, n)
+    return _make_trace(
+        cfg, n, rng,
+        lambda i: rng.integers(0, cfg.vocab, int(lens[i])), gen,
+        arrival_rate=arrival_rate, deadline=deadline,
+        priority_levels=priority_levels, burst_size=burst_size)
+
+
+#: Scenario registry: name -> trace builder with the uniform
+#: ``(cfg, n, *, rng, **kwargs)`` signature. serve.py's ``--workload``
+#: and bench_serving.py's scenario loop both resolve through this.
+TRACES: Dict[str, Callable[..., List[TraceItem]]] = {
+    "mixed": synthetic_trace,
+    "prefix_heavy": prefix_heavy_trace,
+    "bursty": bursty_trace,
+    "long_context": long_context_trace,
+}
+
+
+def get_trace(name: str) -> Callable[..., List[TraceItem]]:
+    try:
+        return TRACES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r}; registered: "
+            f"{', '.join(sorted(TRACES))}") from None
+
+
+def make_trace(name: str, cfg, n: int, *, rng: np.random.Generator,
+               **kwargs) -> List[TraceItem]:
+    """Build the named scenario's trace (see ``TRACES``)."""
+    return get_trace(name)(cfg, n, rng=rng, **kwargs)

@@ -124,3 +124,16 @@ def make_prefill(cfg, *, policy=None):
         with policy.scope():            # trace-time: pins the policy
             return M.prefill(cfg, params, batch, cache)
     return prefill_fn
+
+
+def make_verify_step(cfg, *, policy=None):
+    """Speculative-verification step under a pinned policy: all k+1
+    pending+draft tokens per slot in ONE prefill-shaped forward (see
+    model.verify_step). The serving engine jits this with the cache
+    donated, same as its serve_step."""
+    policy = _pol.resolve(policy)
+
+    def verify_step(params, tokens, pos, n_tok, cache):
+        with policy.scope():            # trace-time: pins the policy
+            return M.verify_step(cfg, params, tokens, pos, n_tok, cache)
+    return verify_step
