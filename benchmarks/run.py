@@ -36,7 +36,7 @@ from benchmarks import (bench_add, bench_arch_step, bench_distributed_gemm,
                         bench_flash_attention, bench_fused_epilogue,
                         bench_matmul, bench_quant_matmul,
                         bench_roofline_table, bench_serving,
-                        bench_shared_memory, common)
+                        bench_shared_memory, bench_ssd, common)
 
 SUITES = {
     "matmul": bench_matmul.run,               # Table 2 / Fig 7
@@ -49,6 +49,7 @@ SUITES = {
     "fused_epilogue": bench_fused_epilogue.run,  # fused-flush GEMM/SwiGLU
     "quant_matmul": bench_quant_matmul.run,    # int8-weight GEMM path
     "flash_attention": bench_flash_attention.run,  # fused fwd/bwd + decode
+    "ssd": bench_ssd.run,                      # Mamba-2 SSD kernel suite
 }
 
 # Suites whose run() accepts autotune= and sweeps the tuner.

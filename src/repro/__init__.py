@@ -49,6 +49,7 @@ _EXPORTS = {
     "flash_attention_bwd": ("repro.kernels.ops", "flash_attention_bwd"),
     "flash_decode": ("repro.kernels.ops", "flash_decode"),
     "flash_decode_paged": ("repro.kernels.ops", "flash_decode_paged"),
+    "ssd": ("repro.kernels.ops", "ssd"),
     "add": ("repro.kernels.ops", "add"),
     "sub": ("repro.kernels.ops", "sub"),
     # kernel registry (kernels.registry)
@@ -82,6 +83,7 @@ _EXPORTS = {
     "tune_flash_bwd": ("repro.tuning", "tune_flash_bwd"),
     "tune_flash_decode": ("repro.tuning", "tune_flash_decode"),
     "tune_flash_decode_paged": ("repro.tuning", "tune_flash_decode_paged"),
+    "tune_ssd": ("repro.tuning", "tune_ssd"),
     "warm_start": ("repro.tuning", "warm_start"),
     "default_exec_policy": ("repro.tuning", "default_exec_policy"),
     # deprecation shims (string-backend era; warn once per process)

@@ -92,6 +92,89 @@ def choose_decode_config(
     return FlashBlockConfig(bq=1, bk=min(512, tk))
 
 
+@dataclasses.dataclass(frozen=True)
+class SSDBlockConfig:
+    """Tile sizes for the SSD intra-chunk kernel: `q` is the execution
+    chunk along time (any divisor of the model chunk computes the same
+    function — SSD chunking is exact), `bp` tiles the head dim (each
+    p-tile recomputes the (q, q) decay/score matrices)."""
+    q: int
+    bp: int
+
+    def vmem_bytes(self, n: int, itemsize: int,
+                   double_buffer: bool = True) -> int:
+        mult = 2 if double_buffer else 1
+        # streamed per grid cell: x (q, bp), a (q,), b/c (q, n)
+        tiles = (self.q * self.bp + self.q + 2 * self.q * n) * itemsize * mult
+        # f32 scratch: decay mask + score matrix (q, q) each, y (q, bp),
+        # chunk state (n, bp)
+        acc = (2 * self.q * self.q + self.q * self.bp + n * self.bp) * 4
+        return tiles + acc
+
+
+def choose_ssd_config(
+    chunk: int,
+    p: int,
+    n: int,
+    itemsize: int = 4,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+) -> SSDBlockConfig:
+    """Default (q, bp) for the SSD kernel: run at the model's configured
+    chunk with the full head dim, halving the time tile while the
+    working set (dominated by the two (q, q) f32 matrices) exceeds the
+    VMEM budget. The autotuner (tuning.tune_ssd) sweeps alternatives."""
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    q = chunk
+    cfg = SSDBlockConfig(q=q, bp=p)
+    while cfg.vmem_bytes(n, itemsize) > budget and q % 2 == 0 and q > 8:
+        q //= 2
+        cfg = SSDBlockConfig(q=q, bp=p)
+    return cfg
+
+
+def ssd_traffic_bytes(
+    l: int, h: int, p: int, n: int, cfg: SSDBlockConfig, itemsize: int
+) -> int:
+    """Bytes moved HBM<->VMEM by the Pallas SSD composition for one
+    (batch, layer): the kernel streams x/a and the head-broadcast b/c
+    once per head-tile column (`ceil(p/bp)` — b/c re-stream when the
+    head dim is tiled), writes the chunk-diagonal y and the per-chunk
+    states in f32, and the tiny rank-N inter-chunk pass reads the states
+    + y_diag and writes y. The (q, q) decay mask and CB score matrices
+    are VMEM-resident and never exist in HBM — the term this model
+    conspicuously lacks, mirroring flash_traffic_bytes."""
+    nc = math.ceil(l / cfg.q)
+    n_p = math.ceil(p / cfg.bp)
+    x_bytes = l * h * p * itemsize
+    a_bytes = l * h * itemsize * n_p
+    bc_bytes = 2 * l * h * n * itemsize * n_p
+    y_diag = l * h * p * 4                      # kernel out, f32
+    states = nc * h * n * p * 4                 # kernel out, f32
+    # inter-chunk jnp pass: read states + y_diag + c, write y
+    inter = states + y_diag + l * h * n * itemsize + l * h * p * itemsize
+    return x_bytes + a_bytes + bc_bytes + y_diag + states + inter
+
+
+def ssd_unfused_traffic_bytes(
+    l: int, h: int, p: int, n: int, chunk: int, itemsize: int
+) -> int:
+    """The XLA lowering of the chunked composition (kernels.ssd
+    ssd_chunked): the per-chunk (Q, Q) f32 decay mask is written + read
+    and the CB score matrix is written + read twice (once masked for
+    y_diag, once raw) — four quadratic f32 trips per (chunk, head),
+    `4 * Q*Q * 4` bytes, exactly the flash_unfused_traffic_bytes
+    pattern along the time axis — plus the linear operand streams, the
+    f32 decay vectors and the per-chunk state round trip."""
+    nc = math.ceil(l / chunk)
+    operands = (l * h * p + l * h + 2 * l * h * n) * itemsize
+    s_bytes = nc * h * 4 * chunk * chunk * 4    # ldec + cb round trips
+    decays = 3 * l * h * 4                      # a_cum, decay_to_end, ...
+    states = 2 * nc * h * n * p * 4             # written, re-read by scan
+    y_bytes = 2 * l * h * p * 4 + l * h * p * itemsize  # y_diag+y_off+y
+    return operands + s_bytes + decays + states + y_bytes
+
+
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 

@@ -1,0 +1,89 @@
+"""The SSD chokepoint: ambient-Policy routing + custom VJP for the
+chunked Mamba-2 scan.
+
+`models/ssm.py::mamba_apply` sends its prefill/train SSD scan here —
+the SSM analogue of `core.gemm.dense` and `models.attention.attention`:
+one call site, a typed `Policy` deciding which registered kernel runs,
+and a `custom_vjp` that differentiates the *unfused* jnp composition
+(`kernels.ssd.ssd_chunked`) so the fused Pallas forward trains without
+a handwritten backward kernel; cotangent math follows the same f32
+state discipline as the forward. The policy rides the nondiff slot, so
+an identical policy never retraces and the backward runs under the
+same policy object as the forward (tests/test_policy.py discipline).
+
+f64 inputs reroute to the xla backend (no MXU path), mirroring the
+attention and GEMM chokepoints.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as _policy
+from repro.core.policy import Policy
+from repro.kernels import ops as kops
+from repro.kernels.ssd import ssd_chunked
+
+
+def _route_dtype(pol: Policy, dtype) -> Policy:
+    if jnp.dtype(dtype) == jnp.float64 and pol.backend != "xla":
+        return pol.replace(backend="xla")
+    return pol
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_fused(x, a, b, c, s0, chunk, pol):
+    return kops.ssd(x, a, b, c, chunk, init_state=s0, policy=pol)
+
+
+def _ssd_fused_fwd(x, a, b, c, s0, chunk, pol):
+    out = _ssd_fused(x, a, b, c, s0, chunk, pol)
+    return out, (x, a, b, c, s0)
+
+
+def _ssd_fused_bwd(chunk, pol, res, ct):
+    # Differentiate the unfused composition — the same function every
+    # registered backend computes — exactly as the gated-GEMM and
+    # attention chokepoints do. The cotangents are pure jnp (GEMM-shaped
+    # einsums + the scan transpose), so nothing here needs a policy.
+    del pol
+    x, a, b, c, s0 = res
+    _, vjp = jax.vjp(
+        lambda x_, a_, b_, c_, s_: ssd_chunked(
+            x_, a_, b_, c_, chunk, init_state=s_),
+        x, a, b, c, s0)
+    return vjp(ct)
+
+
+_ssd_fused.defvjp(_ssd_fused_fwd, _ssd_fused_bwd)
+
+
+def ssd(
+    x: jnp.ndarray,            # (B, L, H, P) — dt-scaled inputs
+    a: jnp.ndarray,            # (B, L, H)    — dt*A log decays
+    b: jnp.ndarray,            # (B, L, G, N)
+    c: jnp.ndarray,            # (B, L, G, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,   # (B, H, P, N)
+    *,
+    policy: Optional[Policy] = None,
+):
+    """Policy-routed, differentiable SSD scan. Returns
+    ``(y (B, L, H, P) in x.dtype, final_state (B, H, P, N) f32)``.
+
+    Explicit `policy=` beats the ambient default (`Policy.scope()` /
+    `set_default_policy`). A missing `init_state` becomes a zeros array
+    before the custom_vjp so every differentiable argument is a real
+    array (no Optional in the VJP signature) — its cotangent is simply
+    discarded by callers that passed None.
+    """
+    pol = _route_dtype(_policy.resolve(policy, None), x.dtype)
+    bsz, _, h, p = x.shape
+    n = b.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    return _ssd_fused(x, a, b, c, init_state, chunk, pol)

@@ -25,6 +25,9 @@ Execution selection is typed: every public op takes a
     flash_decode_paged  xla (page-gather + ref composition) | pallas
                 (scalar-prefetched page-table gather, optional int8
                 in-kernel dequant)
+    ssd         xla (chunked jnp composition) | naive (sequential
+                per-token scan oracle) | pallas (intra-chunk Pallas
+                kernel: decay mask + CB scores VMEM-resident)
     add / sub   xla | pallas/naive (elementwise kernel)
 
 `policy.interpret` (None = auto off-TPU) decides interpreter vs.
@@ -50,6 +53,7 @@ from repro.kernels import matmul as _mm
 from repro.kernels import matmul_naive as _mmn
 from repro.kernels import ref as _ref
 from repro.kernels import registry as _registry
+from repro.kernels import ssd as _ssd
 from repro.kernels.registry import register_op
 from repro.tuning import cache as _tcache
 
@@ -678,6 +682,93 @@ def flash_decode_paged(
     impl = _registry.get_impl("flash_decode_paged", pol.backend)
     return impl(q, kp, vp, table, policy=pol, pos=pos, window=window,
                 ks=ks, vs=vs, bk=bk, block=block)
+
+
+# ----------------------------------------------------------------------
+# SSD (Mamba-2 state-space duality)
+# ----------------------------------------------------------------------
+
+@register_op("ssd", backend="xla")
+def _ssd_xla(x, a, b, c, *, policy, chunk, init_state, block):
+    return _ssd.ssd_chunked(x, a, b, c, chunk, init_state=init_state)
+
+
+@register_op("ssd", backend="naive")
+def _ssd_naive(x, a, b, c, *, policy, chunk, init_state, block):
+    return _ref.ssd_ref(x, a, b, c, chunk, init_state=init_state)
+
+
+@register_op("ssd", backend="pallas")
+def _ssd_pallas_impl(x, a, b, c, *, policy, chunk, init_state, block):
+    p = x.shape[-1]
+    n = b.shape[-1]
+    served = False
+    if block is None and policy.autotune == "cached":
+        block = _tcache.get_cache().get_ssd(chunk, p, n, x.dtype, policy)
+        served = block is not None
+    ok = (block is not None and block.q > 0 and chunk % block.q == 0
+          and (block.bp > 0 and p % block.bp == 0 or block.bp == p))
+    if not ok:
+        if block is not None and not served:
+            raise ValueError(f"invalid ssd block config {block} for "
+                             f"chunk={chunk}, p={p}")
+        block = blocking.choose_ssd_config(
+            chunk, p, n, jnp.dtype(x.dtype).itemsize, policy.chip)
+    # the execution chunk may subdivide the model chunk: SSD chunking
+    # is algebraically exact, so any divisor computes the same function.
+    return _ssd.ssd_pallas(
+        x, a, b, c, block.q, init_state=init_state, block_p=block.bp,
+        interpret=policy.resolved_interpret)
+
+
+def ssd(
+    x: jnp.ndarray,            # (B, L, H, P) — dt-scaled inputs
+    a: jnp.ndarray,            # (B, L, H)    — dt*A log decays
+    b: jnp.ndarray,            # (B, L, G, N)
+    c: jnp.ndarray,            # (B, L, G, N)
+    chunk: int,
+    init_state: jnp.ndarray | None = None,   # (B, H, P, N)
+    *,
+    policy: Policy | None = None,
+    backend: str | None = None,        # deprecated string shim
+    block: blocking.SSDBlockConfig | None = None,
+    chip: hw.ChipSpec | None = None,
+):
+    """Chunked SSD scan (Mamba-2 dual form): returns
+    ``(y (B, L, H, P) in x.dtype, final_state (B, H, P, N) f32)``.
+
+    The inter-chunk state is carried in f32 on every backend (cast at
+    the boundary), and `init_state` seeds the recurrence — carried-state
+    chunked prefill composes exactly. The pallas backend keeps the
+    per-chunk decay mask and CB score matrices VMEM-resident
+    (kernels.ssd); `chunk` is the model's configured chunk, while the
+    kernel's *execution* chunk/tiling comes from the autotuner cache
+    (policy.autotune == "cached") or the static chooser — any divisor
+    computes the same function. Training flows through the core.ssd
+    chokepoint, whose custom VJP differentiates the unfused composition.
+    """
+    if x.ndim != 4 or a.ndim != 3 or b.ndim != 4 or c.ndim != 4:
+        raise ValueError(f"ssd expects x(B,L,H,P) a(B,L,H) b/c(B,L,G,N); "
+                         f"got {x.shape}, {a.shape}, {b.shape}, {c.shape}")
+    bsz, l, h, p = x.shape
+    g, n = b.shape[-2:]
+    if a.shape != (bsz, l, h):
+        raise ValueError(f"a shape {a.shape} incompatible with x {x.shape}")
+    if b.shape != (bsz, l, g, n) or c.shape != b.shape:
+        raise ValueError(f"b/c shapes {b.shape}/{c.shape} must match")
+    if h % g:
+        raise ValueError(f"heads {h} not divisible by groups {g}")
+    if chunk <= 0 or l % chunk:
+        raise ValueError(f"seq len {l} not divisible by chunk {chunk}")
+    if init_state is not None and init_state.shape != (bsz, h, p, n):
+        raise ValueError(f"init_state shape {init_state.shape} != "
+                         f"{(bsz, h, p, n)}")
+    pol = _policy.resolve(policy, backend)
+    if chip is not None and chip is not pol.chip:
+        pol = pol.replace(chip=chip)
+    impl = _registry.get_impl("ssd", pol.backend)
+    return impl(x, a, b, c, policy=pol, chunk=chunk, init_state=init_state,
+                block=block)
 
 
 # ----------------------------------------------------------------------

@@ -216,6 +216,45 @@ def flash_decode_paged_ref(
     return out.astype(q.dtype)
 
 
+def ssd_ref(
+    x: jnp.ndarray,              # (B, L, H, P) — dt-scaled
+    a: jnp.ndarray,              # (B, L, H)    — dt * A (log-decay)
+    b_: jnp.ndarray,             # (B, L, G, N)
+    c_: jnp.ndarray,             # (B, L, G, N)
+    chunk: int,                  # unused: the scan is chunk-free
+    init_state: jnp.ndarray | None = None,   # (B, H, P, N)
+):
+    """Sequential per-token SSD oracle (the 'naive' backend): the plain
+    rank-N linear recurrence s_t = s_{t-1}·exp(a_t) + x_t b_tᵀ,
+    y_t = s_t c_t, in f32 with no chunking at all — ground truth for
+    every chunked formulation (chunking is algebraically exact, so
+    `chunk` is accepted for signature parity and ignored). Returns
+    (y in x.dtype, final_state f32 (B, H, P, N))."""
+    bsz, l, h, p = x.shape
+    g, n = b_.shape[-2:]
+    rep = h // g
+    acc = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+    xf = x.astype(acc)
+    af = a.astype(acc)
+    bf = jnp.repeat(b_.astype(acc), rep, axis=2)           # (B,L,H,N)
+    cf = jnp.repeat(c_.astype(acc), rep, axis=2)
+    s0 = (jnp.zeros((bsz, h, p, n), acc)
+          if init_state is None else init_state.astype(acc))
+
+    def step(s, inp):
+        x_t, a_t, b_t, c_t = inp                           # (B,H,P)/(B,H)/...
+        s = s * jnp.exp(a_t)[..., None, None] \
+            + jnp.einsum("bhp,bhn->bhpn", x_t, b_t)
+        y_t = jnp.einsum("bhn,bhpn->bhp", c_t, s)
+        return s, y_t
+
+    s_final, ys = jax.lax.scan(
+        step, s0,
+        (xf.swapaxes(0, 1), af.swapaxes(0, 1),
+         bf.swapaxes(0, 1), cf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), s_final
+
+
 def attention_bwd_ref(
     q: jnp.ndarray,              # [B, Tq, H, D]
     k: jnp.ndarray,              # [B, Tk, Hkv, D]

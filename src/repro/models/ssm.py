@@ -13,77 +13,13 @@ depthwise conv of width W over the (x, B, C) channels.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
+from repro.core import ssd as _core_ssd
 from repro.distributed.context import constrain
+from repro.kernels.ssd import _segsum, ssd_chunked   # noqa: F401  (compat)
 from repro.models import layers as L
-
-
-def _segsum(a: jnp.ndarray) -> jnp.ndarray:
-    """a: (..., Q) -> (..., Q, Q) with S[i,j] = sum_{j<m<=i} a[..., m],
-    -inf above the diagonal (log-space decay mask)."""
-    q = a.shape[-1]
-    cs = jnp.cumsum(a, axis=-1)
-    s = cs[..., :, None] - cs[..., None, :]
-    ii = jnp.arange(q)[:, None]
-    jj = jnp.arange(q)[None, :]
-    return jnp.where(jj <= ii, s, -jnp.inf)
-
-
-def ssd_chunked(
-    x: jnp.ndarray,      # (B, L, H, P) — already dt-scaled
-    a: jnp.ndarray,      # (B, L, H)    — dt * A (negative log-decay)
-    b_: jnp.ndarray,     # (B, L, G, N)
-    c_: jnp.ndarray,     # (B, L, G, N)
-    chunk: int,
-    init_state: Optional[jnp.ndarray] = None,   # (B, H, P, N)
-):
-    """Returns (y, final_state)."""
-    bsz, l, h, p = x.shape
-    g, n = b_.shape[-2:]
-    rep = h // g
-    assert l % chunk == 0, (l, chunk)
-    nc = l // chunk
-
-    xc = x.reshape(bsz, nc, chunk, h, p)
-    ac = a.reshape(bsz, nc, chunk, h).transpose(0, 1, 3, 2)   # (B,nc,H,Q)
-    bc = jnp.repeat(b_.reshape(bsz, nc, chunk, g, n), rep, axis=3)
-    cc = jnp.repeat(c_.reshape(bsz, nc, chunk, g, n), rep, axis=3)
-
-    # 1. intra-chunk (dense blocked matmul with decay mask)
-    ldec = jnp.exp(_segsum(ac))                               # (B,nc,H,Q,Q)
-    cb = jnp.einsum("bcqhn,bcshn->bchqs", cc, bc)
-    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", cb * ldec, xc)
-
-    # 2. per-chunk states
-    a_cum = jnp.cumsum(ac, axis=-1)                           # (B,nc,H,Q)
-    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)           # (B,nc,H,Q)
-    states = jnp.einsum("bcqhn,bchq,bcqhp->bchpn",
-                        bc, decay_to_end, xc)                 # (B,nc,H,P,N)
-
-    # 3. inter-chunk recurrence
-    chunk_decay = jnp.exp(a_cum[..., -1])                     # (B,nc,H)
-    s0 = (jnp.zeros((bsz, h, p, n), x.dtype)
-          if init_state is None else init_state)
-
-    def step(s, inp):
-        st, dec = inp
-        return s * dec[..., None, None] + st, s               # emit state *before*
-
-    (s_final, prev_states) = jax.lax.scan(
-        step, s0,
-        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
-    prev_states = prev_states.swapaxes(0, 1)                  # (B,nc,H,P,N)
-
-    # 4. state -> output within each chunk
-    state_decay = jnp.exp(a_cum)                              # (B,nc,H,Q)
-    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
-                       cc, prev_states, state_decay)
-    y = (y_diag + y_off).reshape(bsz, l, h, p)
-    return y, s_final
 
 
 # ----------------------------------------------------------------------
@@ -199,7 +135,7 @@ def mamba_apply(p, x, cfg, *, d_model=None, return_state: bool = False):
     # (the Mamba-2 paper's own kernel design; our Pallas analogue is the
     # §Perf substitution model).
     with jax.named_scope("ssdsite"):
-        y, s_final = ssd_chunked(xdt, a_neg, bf, cf, chunk)
+        y, s_final = _core_ssd.ssd(xdt, a_neg, bf, cf, chunk)
     y = y[:, :l]
     y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(bsz, l, d_inner).astype(x.dtype)
@@ -208,9 +144,19 @@ def mamba_apply(p, x, cfg, *, d_model=None, return_state: bool = False):
     out = constrain(L.dense_apply(p["out_proj"], y), "dp", None, None)
     if not return_state:
         return out, None
-    # conv caches: last (W-1) *pre-conv* channel values
-    tail = x[:, -(sc.conv_width - 1):]
+    # conv caches: last (W-1) *pre-conv* channel values. Prompts shorter
+    # than W-1 left-pad the *projected* tail with zeros — matching the
+    # zero conv buffers of mamba_init_state, which is exactly what the
+    # running conv would hold after only `l` tokens. (Padding x before
+    # projection would be wrong: a biased dense of zeros is not zero.)
+    w1 = sc.conv_width - 1
+    tail = x[:, -w1:]
     _, xs_tail, bc_tail, _ = _project(p, tail, cfg, d_model)
+    if tail.shape[1] < w1:
+        padn = w1 - tail.shape[1]
+        pad3 = ((0, 0), (padn, 0), (0, 0))
+        xs_tail = jnp.pad(xs_tail, pad3)
+        bc_tail = jnp.pad(bc_tail, pad3)
     return out, {"ssd": s_final, "conv": xs_tail, "conv_bc": bc_tail}
 
 

@@ -261,6 +261,26 @@ def attention_bwd_savings(tq: int, tk: int, d: int, itemsize: int,
             "saved_frac": 1.0 - fused / unfused, "cfg": cfg}
 
 
+def ssd_savings(l: int, h: int, p: int, n: int, chunk: int,
+                itemsize: int = 4,
+                cfg: blocking.SSDBlockConfig | None = None,
+                chip: hw.ChipSpec = hw.DEFAULT_CHIP) -> dict:
+    """Fractional HBM-byte saving of the fused SSD intra-chunk kernel
+    over the XLA chunked lowering — the number
+    benchmarks/bench_ssd.py asserts. The unfused composition
+    materialises, per chunk and head, the (Q, Q) decay mask and CB
+    score block in f32 (write + re-read apiece, the flash-attention
+    story with Q = chunk); the fused kernel keeps both VMEM-resident,
+    paying only the operand streams and the per-chunk state/diag
+    outputs that feed the inter-chunk scan."""
+    if cfg is None:
+        cfg = blocking.choose_ssd_config(chunk, p, n, itemsize, chip=chip)
+    fused = blocking.ssd_traffic_bytes(l, h, p, n, cfg, itemsize)
+    unfused = blocking.ssd_unfused_traffic_bytes(l, h, p, n, chunk, itemsize)
+    return {"fused_bytes": fused, "unfused_bytes": unfused,
+            "saved_frac": 1.0 - fused / unfused, "cfg": cfg}
+
+
 # ----------------------------------------------------------------------
 # KV-cache traffic + capacity models (paged / quantized serving)
 # ----------------------------------------------------------------------
@@ -276,6 +296,15 @@ def kv_decode_traffic_bytes(pos: int, heads: int, d: int, itemsize: int,
     if quant_kv == "int8":
         return rows * (d + 4)
     return rows * d * itemsize
+
+
+def ssm_decode_state_bytes(heads: int, p: int, n: int) -> int:
+    """HBM bytes ONE decode step streams for one slot's SSD recurrent
+    state: the (H, P, N) f32 state is read and written back once,
+    independent of position — the O(1)-state contrast to
+    kv_decode_traffic_bytes' O(pos) growth that the serving benchmark's
+    long_context rows assert."""
+    return 2 * heads * p * n * 4
 
 
 def kv_quant_savings(pos: int, heads: int, d: int, itemsize: int) -> dict:

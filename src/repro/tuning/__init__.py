@@ -15,26 +15,28 @@ from repro.tuning.cache import (CACHE_ENV_VAR, TuningCache,
                                 flash_decode_key, flash_decode_paged_key,
                                 flash_key, gated_key,
                                 get_cache, matmul_key, reset_cache,
-                                set_cache)
+                                set_cache, ssd_key)
 from repro.tuning.space import (flash_bwd_candidates, flash_candidates,
                                 flash_decode_candidates,
                                 flash_decode_paged_candidates,
-                                gated_matmul_candidates, matmul_candidates)
+                                gated_matmul_candidates, matmul_candidates,
+                                ssd_candidates)
 from repro.tuning.timing import time_jax
 
 _LAZY = ("TuneResult", "default_exec_backend", "default_exec_policy",
          "describe_warm_start", "model_attention_shapes",
-         "model_gemm_shapes", "tune_flash_attention", "tune_flash_bwd",
-         "tune_flash_decode", "tune_flash_decode_paged", "tune_gated_matmul",
-         "tune_matmul", "warm_start")
+         "model_gemm_shapes", "model_ssd_shapes", "tune_flash_attention",
+         "tune_flash_bwd", "tune_flash_decode", "tune_flash_decode_paged",
+         "tune_gated_matmul", "tune_matmul", "tune_ssd", "warm_start")
 
 __all__ = [
     "CACHE_ENV_VAR", "TuningCache", "default_cache_path", "flash_bwd_key",
     "flash_decode_key", "flash_decode_paged_key", "flash_key",
     "gated_key", "get_cache", "matmul_key", "reset_cache", "set_cache",
+    "ssd_key",
     "flash_bwd_candidates", "flash_candidates", "flash_decode_candidates",
     "flash_decode_paged_candidates",
-    "gated_matmul_candidates", "matmul_candidates",
+    "gated_matmul_candidates", "matmul_candidates", "ssd_candidates",
     "time_jax", *_LAZY,
 ]
 

@@ -463,6 +463,79 @@ def tune_flash_bwd(
         cache, save, pol.kernel_fingerprint)
 
 
+def tune_ssd(
+    chunk: int,
+    p: int,
+    n: int,
+    dtype="float32",
+    *,
+    heads: int = 4,
+    groups: int = 1,
+    batch: int = 1,
+    seqlen: int | None = None,
+    policy: Policy | None = None,
+    backend: str | None = None,         # deprecated string shim
+    cache: TuningCache | None = None,
+    chip: hw.ChipSpec | None = None,
+    warmup: int = 1,
+    iters: int = 3,
+    max_candidates: int | None = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TuneResult:
+    """Sweep (q, bp) execution tiles for the SSD intra-chunk kernel
+    over one (model chunk, head dim P, state dim N) shape and persist
+    the winner under ssd_key.
+
+    Because chunking is algebraically exact, every candidate computes
+    the same output — the sweep is purely a perf vote between "bigger
+    intra-chunk matmuls" (large q: quadratic (q, q) decay/score blocks,
+    few scan steps) and "cheaper masks, longer scan" (small q). `seqlen`
+    (default 4 model chunks) sets the timed sequence; decays are drawn
+    negative, as mamba_apply's -exp(A_log)*dt always is."""
+    pol = _exec_policy(policy, backend)
+    if chip is not None:        # explicit kwarg overrides the policy's chip
+        pol = pol.replace(chip=chip)
+    chip = pol.chip
+    cache = get_cache() if cache is None else cache
+    interpret = pol.resolved_interpret
+    rng = np.random.default_rng(seed)
+    l = seqlen or 4 * chunk
+    if l % chunk:
+        raise ValueError(f"seqlen {l} must be a multiple of chunk {chunk}")
+    x = jnp.asarray(rng.normal(size=(batch, l, heads, p)), dtype)
+    a = jnp.asarray(-np.abs(rng.normal(size=(batch, l, heads))) * 0.1,
+                    jnp.float32)
+    b = jnp.asarray(rng.normal(size=(batch, l, groups, n)), dtype)
+    c = jnp.asarray(rng.normal(size=(batch, l, groups, n)), dtype)
+    itemsize = jnp.dtype(dtype).itemsize
+
+    return _sweep(
+        "ssd", f"ssd Q{chunk}xP{p}xN{n} {np.dtype(dtype).name}",
+        _space.ssd_candidates(chunk, p, n, itemsize, chip=chip,
+                              max_candidates=max_candidates),
+        lambda cfg: _timer(lambda xx, aa, bb, cc, c=cfg: _ops.ssd(
+            xx, aa, bb, cc, chunk, policy=pol, block=c),
+            (x, a, b, c), interpret, warmup, iters),
+        lambda cfg, meta: cache.put_ssd(chunk, p, n, dtype, pol, cfg,
+                                        **meta),
+        cache, save, pol.kernel_fingerprint)
+
+
+def model_ssd_shapes(cfg, batch: int = 1, seq: int = 1) -> list[tuple]:
+    """The SSD shapes a step of `cfg` routes through core.ssd, as
+    deduplicated ``(op, chunk, P, N, "-")`` entries mirroring the other
+    model_*_shapes 5-tuple layout. Both pure-SSM and hybrid families
+    contribute (every mamba layer shares one shape); attention-only
+    configs contribute nothing. `batch`/`seq` are accepted for signature
+    symmetry — the SSD tile space depends only on (chunk, P, N)."""
+    del batch, seq
+    sc = getattr(cfg, "ssm", None)
+    if sc is None or getattr(cfg, "family", None) not in ("ssm", "hybrid"):
+        return []
+    return [("ssd", sc.chunk, sc.head_dim, sc.d_state, "-")]
+
+
 def model_attention_shapes(cfg, batch: int, seq: int,
                            backward: bool = False,
                            decode_len: int | None = None) -> list[tuple]:
@@ -597,7 +670,8 @@ def warm_start(
                     | {s for q in seqs
                        for s in model_attention_shapes(
                            cfg, batch, q, backward=backward,
-                           decode_len=decode_len)})
+                           decode_len=decode_len)}
+                    | set(model_ssd_shapes(cfg, batch)))
     hits, misses, tuned, failed = [], [], [], []
     for entry in shapes:
         op, m, n, k, ep = entry
@@ -612,6 +686,8 @@ def warm_start(
             hit = cache.get_flash_bwd(m, n, k, dtype, pol) is not None
         elif op == "flash_decode":
             hit = cache.get_flash_decode(n, k, dtype, pol) is not None
+        elif op == "ssd":
+            hit = cache.get_ssd(m, n, k, dtype, pol) is not None
         else:
             hit = cache.get_matmul(m, n, k, dtype, pol,
                                    epilogue=ep) is not None
@@ -639,6 +715,11 @@ def warm_start(
                                       cache=cache, iters=iters,
                                       max_candidates=max_candidates,
                                       save=False)
+                elif op == "ssd":
+                    tune_ssd(m, n, k, dtype, policy=pol,
+                             cache=cache, iters=iters,
+                             max_candidates=max_candidates,
+                             save=False)
                 else:
                     tune_matmul(m, n, k, dtype, epilogue=ep,
                                 quant="int8" if op == "matmul_q" else "off",

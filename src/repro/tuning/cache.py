@@ -40,7 +40,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core import hw
-from repro.core.blocking import BlockConfig, FlashBlockConfig
+from repro.core.blocking import BlockConfig, FlashBlockConfig, SSDBlockConfig
 
 CACHE_VERSION = 1
 CACHE_ENV_VAR = "REPRO_TUNING_CACHE"
@@ -119,6 +119,16 @@ def flash_decode_paged_key(page_size: int, d: int, dtype, backend) -> str:
     every pool size and slot count. The op prefix keeps these entries
     disjoint from dense flash_decode winners."""
     return (f"flash_decode_paged|p{page_size}xd{d}|{np.dtype(dtype).name}|"
+            f"{_backend_tag(backend)}")
+
+
+def ssd_key(chunk: int, p: int, n: int, dtype, backend) -> str:
+    """SSD winners are keyed by (model chunk, head dim P, state dim N):
+    chunking is algebraically exact, so the execution tile (q, bp) is a
+    pure perf knob and any sequence length padded to the same model
+    chunk shares one entry — L is deliberately absent from the key,
+    like pos in flash_decode's."""
+    return (f"ssd|Q{chunk}xP{p}xN{n}|{np.dtype(dtype).name}|"
             f"{_backend_tag(backend)}")
 
 
@@ -286,6 +296,19 @@ class TuningCache:
                                cfg: FlashBlockConfig, **meta: Any) -> str:
         key = flash_decode_paged_key(page_size, d, dtype, backend)
         self.put(key, {"bk": cfg.bk, "tuned_at": _now(), **meta})
+        return key
+
+    def get_ssd(self, chunk: int, p: int, n: int, dtype,
+                backend) -> Optional[SSDBlockConfig]:
+        e = self.get(ssd_key(chunk, p, n, dtype, backend))
+        if e is None:
+            return None
+        return SSDBlockConfig(q=int(e["q"]), bp=int(e["bp"]))
+
+    def put_ssd(self, chunk: int, p: int, n: int, dtype, backend,
+                cfg: SSDBlockConfig, **meta: Any) -> str:
+        key = ssd_key(chunk, p, n, dtype, backend)
+        self.put(key, {"q": cfg.q, "bp": cfg.bp, "tuned_at": _now(), **meta})
         return key
 
     def get_flash_bwd(self, tq: int, tk: int, d: int, dtype,

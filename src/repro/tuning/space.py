@@ -10,7 +10,7 @@ fit) — the sweep only reorders configs the analysis already admits.
 from __future__ import annotations
 
 from repro.core import blocking, hw
-from repro.core.blocking import BlockConfig, FlashBlockConfig
+from repro.core.blocking import BlockConfig, FlashBlockConfig, SSDBlockConfig
 
 _BM = (128, 256, 512)
 _BN = (128, 256, 512)
@@ -183,6 +183,50 @@ def flash_decode_paged_candidates(
             continue
         seen.add(bk)
         out.append(cfg)
+    if max_candidates is not None:
+        out = out[:max(1, max_candidates)]
+    return out
+
+
+def _halving_divisors(x: int, floor: int) -> list[int]:
+    out = [x]
+    while x % 2 == 0 and x // 2 >= floor:
+        x //= 2
+        out.append(x)
+    return out
+
+
+def ssd_candidates(
+    chunk: int,
+    p: int,
+    n: int,
+    itemsize: int,
+    chip: hw.ChipSpec = hw.DEFAULT_CHIP,
+    vmem_fraction: float = 0.5,
+    max_candidates: int | None = None,
+) -> list[SSDBlockConfig]:
+    """Feasible (q, bp) execution tiles for the SSD intra-chunk kernel.
+
+    Chunking is exact (DESIGN §6: the dual form is a blocked matmul
+    along time), so the execution chunk q may be ANY divisor of the
+    model chunk without changing the output — smaller q shrinks the
+    quadratic (q, q) decay mask and CB score block quadratically at the
+    cost of more inter-chunk scan steps; bp tiles the head dim P for
+    VMEM headroom. The static chooser's pick comes first as the
+    baseline; the rest is the halving-divisor lattice under the
+    double-buffered VMEM budget."""
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    default = blocking.choose_ssd_config(
+        chunk, p, n, itemsize, chip=chip, vmem_fraction=vmem_fraction)
+    out = [default]
+    seen = {(default.q, default.bp)}
+    for q in _halving_divisors(chunk, 8):
+        for bp in _halving_divisors(p, 8):
+            cfg = SSDBlockConfig(q, bp)
+            if (q, bp) in seen or cfg.vmem_bytes(n, itemsize) > budget:
+                continue
+            seen.add((q, bp))
+            out.append(cfg)
     if max_candidates is not None:
         out = out[:max(1, max_candidates)]
     return out

@@ -1,10 +1,14 @@
 """SSD Pallas kernel (interpret) vs the jnp oracle (models.ssm), across
-chunk sizes, head counts and group configurations."""
+chunk sizes, head counts, group configurations, dtypes, carried state
+and the core-level custom VJP."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import ssd as core_ssd
+from repro.core.policy import Policy
 from repro.kernels.ssd import ssd_pallas
 from repro.models.ssm import ssd_chunked
 
@@ -23,6 +27,123 @@ def test_ssd_pallas_matches_oracle(rng, chunk, h, g):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
                                rtol=1e-4, atol=1e-4)
+
+
+def _operands(rng, B=2, L=64, H=4, G=2, P=16, N=16, dtype=jnp.float32):
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), dtype)
+    a = -jnp.asarray(rng.uniform(0.01, 0.5, size=(B, L, H)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(B, L, G, N)), dtype)
+    cm = jnp.asarray(rng.normal(size=(B, L, G, N)), dtype)
+    return x, a, bm, cm
+
+
+def test_ssd_pallas_init_state_matches_oracle(rng):
+    """The bug this PR fixed: ssd_pallas silently DROPPED init_state.
+    A carried state must seed the inter-chunk scan on both backends."""
+    x, a, bm, cm = _operands(rng)
+    s0 = jnp.asarray(rng.normal(size=(2, 4, 16, 16)), jnp.float32)
+    y_ref, s_ref = ssd_chunked(x, a, bm, cm, 16, init_state=s0)
+    y_k, s_k = ssd_pallas(x, a, bm, cm, 16, init_state=s0, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+    # and it must actually CHANGE the answer vs a zero state
+    y0, _ = ssd_pallas(x, a, bm, cm, 16, interpret=True)
+    assert float(jnp.max(jnp.abs(y_k - y0))) > 1e-3
+
+
+def test_ssd_pallas_carried_state_split_prefill_bitwise(rng):
+    """Chunked prefill: running the second half from the first half's
+    final state is bitwise-identical to one full pass WITHIN the pallas
+    backend — same kernel, same accumulation order, same f32 carry, so
+    nothing may drift when the serving engine splits a prompt."""
+    x, a, bm, cm = _operands(rng, L=64)
+    y_full, s_full = ssd_pallas(x, a, bm, cm, 16, interpret=True)
+    y1, s1 = ssd_pallas(x[:, :32], a[:, :32], bm[:, :32], cm[:, :32], 16,
+                        interpret=True)
+    y2, s2 = ssd_pallas(x[:, 32:], a[:, 32:], bm[:, 32:], cm[:, 32:], 16,
+                        init_state=s1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_full[:, :32]),
+                                  np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(y_full[:, 32:]),
+                                  np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(s_full), np.asarray(s2))
+
+
+def test_ssd_bf16_state_carried_f32(rng):
+    """The bug this PR fixed: the oracle seeded s0 with x.dtype while
+    the kernel accumulates f32. bf16 inputs must yield f32 states equal
+    across backends to f32-roundoff, not bf16-roundoff."""
+    x, a, bm, cm = _operands(rng, dtype=jnp.bfloat16)
+    y_ref, s_ref = ssd_chunked(x, a, bm, cm, 16)
+    y_k, s_k = ssd_pallas(x, a, bm, cm, 16, interpret=True)
+    assert s_ref.dtype == jnp.float32
+    assert s_k.dtype == jnp.float32
+    assert y_ref.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(y_k, np.float32), np.asarray(y_ref, np.float32),
+        rtol=6e-2, atol=6e-2)
+
+
+def test_ssd_execution_chunk_invariance(rng):
+    """Chunking is algebraically exact: the execution chunk is a pure
+    perf knob, so every (q, bp) candidate computes the same function —
+    the property that makes the autotuner's sweep sound."""
+    x, a, bm, cm = _operands(rng)
+    y_ref, s_ref = ssd_chunked(x, a, bm, cm, 64)
+    for q, bp in ((64, 16), (32, 8), (16, 16), (8, 4)):
+        y, s = ssd_pallas(x, a, bm, cm, q, block_p=bp, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"q={q}, bp={bp}")
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"q={q}, bp={bp}")
+
+
+def test_core_ssd_vjp_matches_unfused(rng):
+    """core.ssd under a pallas policy trains: its custom VJP must match
+    jax.grad through the unfused ssd_chunked composition."""
+    x, a, bm, cm = _operands(rng)
+    s0 = jnp.asarray(rng.normal(size=(2, 4, 16, 16)), jnp.float32)
+    pol = Policy(backend="pallas", interpret=True)
+
+    def fused(x_, a_, b_, c_, s_):
+        y, s = core_ssd.ssd(x_, a_, b_, c_, 16, init_state=s_, policy=pol)
+        return jnp.sum(y ** 2) + jnp.sum(s ** 2)
+
+    def unfused(x_, a_, b_, c_, s_):
+        y, s = ssd_chunked(x_, a_, b_, c_, 16, init_state=s_)
+        return jnp.sum(y ** 2) + jnp.sum(s ** 2)
+
+    grads = jax.grad(fused, argnums=(0, 1, 2, 3, 4))(x, a, bm, cm, s0)
+    refs = jax.grad(unfused, argnums=(0, 1, 2, 3, 4))(x, a, bm, cm, s0)
+    for gi, ri in zip(grads, refs):
+        scale = max(float(jnp.max(jnp.abs(ri))), 1.0)
+        np.testing.assert_allclose(np.asarray(gi), np.asarray(ri),
+                                   rtol=1e-4, atol=1e-3 * scale)
+
+
+def test_core_ssd_grad_finite_strong_decay(rng):
+    """Gradients through the masked log-space exp (the unmasked-exp bug
+    this PR fixed would overflow here) stay finite under strong decay."""
+    B, L, H, P, G, N = 1, 64, 2, 8, 1, 16
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 3.0, size=(B, L, H)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(B, L, G, N)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(B, L, G, N)), jnp.float32)
+    pol = Policy(backend="pallas", interpret=True)
+
+    def loss(x_, a_):
+        y, s = core_ssd.ssd(x_, a_, bm, cm, 32, policy=pol)
+        return jnp.sum(y ** 2) + jnp.sum(s ** 2)
+
+    gx, ga = jax.grad(loss, argnums=(0, 1))(x, a)
+    assert np.isfinite(np.asarray(gx)).all()
+    assert np.isfinite(np.asarray(ga)).all()
 
 
 def test_ssd_pallas_long_decay(rng):

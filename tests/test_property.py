@@ -284,6 +284,39 @@ def test_flash_bwd_backends_match_reference(tq, tk, d, group, causal,
                                   r, dtype)
 
 
+@given(chunk=st.sampled_from([8, 16]), nc=st.sampled_from([1, 2, 4]),
+       h=st.sampled_from([2, 4]), group=st.sampled_from([1, 2]),
+       n=st.sampled_from([8, 16]), p=st.sampled_from([8, 16]),
+       carried=st.booleans(),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=5, deadline=None)
+def test_ssd_backends_match_reference(chunk, nc, h, group, n, p, carried,
+                                      dtype, seed):
+    """Every registered SSD backend vs the sequential per-token scan
+    oracle — the chunked algebra (intra-chunk masks + inter-chunk
+    recurrence) must be invisible, carried init_state and bf16 inputs
+    included. States are compared at f32 tolerance regardless of input
+    dtype: the f32-carry contract this PR pinned."""
+    rng = np.random.default_rng(seed)
+    l, g = chunk * nc, h // group
+    x = jnp.asarray(rng.normal(size=(2, l, h, p)), dtype)
+    a = -jnp.asarray(rng.uniform(0.01, 0.5, size=(2, l, h)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, l, g, n)), dtype)
+    c = jnp.asarray(rng.normal(size=(2, l, g, n)), dtype)
+    s0 = (jnp.asarray(rng.normal(size=(2, h, p, n)), jnp.float32)
+          if carried else None)
+    ref_y, ref_s = kref.ssd_ref(x, a, b, c, chunk, init_state=s0)
+    ref_y = ref_y.astype(jnp.float32)
+    for backend in registry.registered_backends("ssd"):
+        y, s = ops.ssd(x, a, b, c, chunk, init_state=s0,
+                       policy=Policy(backend=backend, interpret=True))
+        assert y.dtype == jnp.dtype(dtype), backend
+        assert s.dtype == jnp.float32, backend
+        _assert_backend_close(backend, y, ref_y, dtype)
+        _assert_backend_close(f"{backend}:state", s, ref_s, "float32")
+
+
 @given(seed=st.integers(0, 2**31), scale=st.floats(0.01, 10.0))
 @settings(max_examples=15, deadline=None)
 def test_compression_error_feedback_bounded(seed, scale):

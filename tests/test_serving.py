@@ -186,6 +186,68 @@ def test_engine_flash_decode_token_exact_pallas():
             assert req.generated == want, (req.rid, req.generated, want)
 
 
+def test_engine_ssd_token_exact_pallas():
+    """Serving mamba2 under a pallas policy: every prefill must route
+    through the ssd_pallas kernel via the ("ssd", "pallas") registry
+    entry (spied at the kernel module — the registered impl looks the
+    symbol up at call time), and the engine must emit exactly the
+    reference tokens computed under the SAME policy."""
+    from repro.core.policy import Policy
+    from repro.kernels import ssd as ssd_mod
+
+    cfg = get_config("mamba2-2.7b", reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pol = Policy(backend="pallas", interpret=True)
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in CASES["mamba2-2.7b"]]
+
+    calls = []
+    orig = ssd_mod.ssd_pallas
+
+    def spy(x, *a, **kw):
+        calls.append(x.shape)
+        return orig(x, *a, **kw)
+
+    ssd_mod.ssd_pallas = spy
+    try:
+        eng = ServingEngine(cfg, params, max_slots=2, max_len=64,
+                            policy=pol)
+        reqs = [eng.submit(p, g) for p, g in zip(prompts, GENS)]
+        report = eng.run()
+    finally:
+        ssd_mod.ssd_pallas = orig
+
+    assert report["n_finished"] == len(reqs)
+    assert calls, "pallas-policy prefill never reached the SSD kernel"
+    assert all(len(shape) == 4 for shape in calls)   # (B, L, H, P) contract
+
+    with pol.scope():
+        for req, prompt, g in zip(reqs, prompts, GENS):
+            want = _reference_generate(cfg, params, prompt, g)
+            assert req.generated == want, (req.rid, req.generated, want)
+
+
+def test_engine_short_prompt_conv_tail():
+    """The conv-state bug this PR fixed: a prompt SHORTER than
+    conv_width - 1 used to yield a mis-shaped conv-state tail from
+    mamba_apply(return_state=True). Such prompts must admit cleanly
+    through the engine and decode token-exactly vs the reference."""
+    cfg = get_config("mamba2-2.7b", reduced=True)   # conv_width = 4
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    w1 = cfg.ssm.conv_width - 1
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in (1, w1 - 1, w1, 8)]
+    gens = [4, 4, 4, 4]
+    eng, reqs, report = _run_engine(cfg, params, prompts, gens,
+                                    max_slots=2, max_len=32)
+    assert report["n_finished"] == len(reqs)
+    for req, prompt, g in zip(reqs, prompts, gens):
+        want = _reference_generate(cfg, params, prompt, g)
+        assert req.generated == want, (len(prompt), req.generated, want)
+
+
 def test_scheduler_fcfs_and_release():
     sched = SlotScheduler(2)
     reqs = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new_tokens=2,
